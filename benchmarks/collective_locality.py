@@ -1,0 +1,73 @@
+"""Paper-claim benchmark: cross-boundary traffic is thin.
+
+Quantifies the claim twice:
+  1. Management plane: cross-cluster vs local bytes while running a hybrid
+     pipeline (the paper's qualitative claim, measured).
+  2. Data plane (SPMD): per-axis collective bytes from the compiled multi-pod
+     HLO — DCN (pod-axis) vs ICI (in-pod) — plus the Titchener local-sync
+     amortization factor (sync-DP DCN bytes / local-SGD DCN bytes).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def management_plane_locality() -> List[tuple]:
+    from repro.core.plane import ManagementPlane
+    from repro.pipelines import DAG, Task, HybridComposer
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("onprem-a")
+    comp = HybridComposer(plane, workers={"master": ["w0"],
+                                          "onprem-a": ["w1"]},
+                          worker_queues={"w0": ("default",),
+                                         "w1": ("onprem", "default")})
+    dag = DAG("loc", [
+        Task("e", kind="etl", payload={"batches": 2}),
+        Task("t", kind="python", upstream=("e",)),
+        Task("l", kind="python", upstream=("t",), requires=("onprem",)),
+    ])
+    comp.add_dag(dag)
+    assert comp.run_dag("loc", max_ticks=60)
+    rep = plane.boundary_report()
+    total = rep["cross_cluster_bytes"] + rep["local_bytes"]
+    return [("mgmt_cross_cluster_bytes", float(rep["cross_cluster_bytes"])),
+            ("mgmt_local_bytes", float(rep["local_bytes"])),
+            ("mgmt_locality_ratio", rep["locality_ratio"])]
+
+
+def data_plane_locality(cell: str = "qwen3-32b__train_4k") -> List[tuple]:
+    p = ARTIFACTS / "multi" / f"{cell}.json"
+    if not p.exists():
+        return [("dataplane_missing_artifact", 0.0)]
+    rec = json.loads(p.read_text())
+    hs = rec["hlo_stats"]
+    rows = [(f"dcn_bytes[{rec['cell']}]", float(hs["cross_pod_bytes"])),
+            (f"ici_bytes[{rec['cell']}]", float(hs["in_pod_bytes"]))]
+    if hs["cross_pod_bytes"]:
+        rows.append((f"ici_to_dcn_ratio[{rec['cell']}]",
+                     hs["in_pod_bytes"] / hs["cross_pod_bytes"]))
+    return rows
+
+
+def titchener_amortization() -> List[tuple]:
+    import jax
+    from repro.configs import base as configs
+    from repro.models.params import abstract_params
+    from repro.optim.local_sgd import LocalSGDConfig, dcn_bytes_per_round
+    cfg = configs.get("qwen3-32b")
+    params = abstract_params(cfg)
+    lcfg = LocalSGDConfig()
+    local, sync = dcn_bytes_per_round(params, lcfg)
+    return [("local_sgd_dcn_bytes_per_round", float(local)),
+            ("sync_dp_dcn_bytes_per_H_steps", float(sync)),
+            ("titchener_dcn_amortization_x", sync / local)]
+
+
+def run() -> List[tuple]:
+    return (management_plane_locality() + data_plane_locality()
+            + titchener_amortization())

@@ -1,0 +1,98 @@
+"""Control-plane op latencies + scaling (the paper has no perf tables; these are
+the management-plane numbers a production deployment is sized with).
+
+  * register/discover/dispatch/heartbeat wall-time per op at 2..64 clusters
+  * configuration-phase cost: Algorithm 5 runtime + messages for growing S
+  * failure recovery: ticks from partition to re-dispatch
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.core.service_graph import AppSpec, Pod, Service
+
+
+def _time_us(fn: Callable[[], None], n: int = 50) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_plane_ops(n_clusters: int = 8) -> List[tuple]:
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    for i in range(n_clusters - 1):
+        plane.add_cluster(f"c{i}")
+    rows = []
+    agent = plane.agents["c0"]
+    rows.append((f"overwatch_put[{n_clusters}]",
+                 _time_us(lambda: agent.ow.put("/bench/k", {"v": 1}))))
+    rows.append((f"overwatch_get[{n_clusters}]",
+                 _time_us(lambda: agent.ow.get("/bench/k"))))
+    rows.append((f"heartbeat[{n_clusters}]",
+                 _time_us(lambda: agent.heartbeat())))
+    jid = [0]
+
+    def dispatch():
+        jid[0] += 1
+        plane.submit_job("sim", steps=1, job_id=f"bench-{jid[0]}")
+
+    rows.append((f"dispatch[{n_clusters}]", _time_us(dispatch, n=20)))
+    return rows
+
+
+def bench_configuration_phase(n_services: int = 16, n_clusters: int = 4):
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    clusters = ["master"] + [f"c{i}" for i in range(n_clusters - 1)]
+    for c in clusters[1:]:
+        plane.add_cluster(c)
+    pods, services, partition = [], [], {}
+    for k in range(n_services):
+        host = clusters[k % len(clusters)]
+        sname, bname = f"svc{k}", f"back{k}"
+        services.append(Service(sname, 7000 + k, (bname,)))
+        pods.append(Pod(bname, needs=()))
+        partition[bname] = host
+        cname = f"cons{k}"
+        pods.append(Pod(cname, needs=(sname,)))
+        partition[cname] = clusters[(k + 1) % len(clusters)]
+    spec = AppSpec(tuple(services), tuple(pods), partition)
+    t0 = time.perf_counter()
+    plane.upload_spec(spec)
+    dt = (time.perf_counter() - t0) * 1e6
+    return [(f"configure[{n_services}svc,{n_clusters}cl]", dt)]
+
+
+def bench_failure_recovery() -> List[tuple]:
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("c0", local_plane=SimLocalPlane(rate=0.2))
+    plane.add_cluster("c1", local_plane=SimLocalPlane(rate=0.2))
+    jid = plane.submit_job("sim", steps=100)
+    plane.tick(n=3)
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]["cluster"]
+    plane.fabric.partition_cluster(placed)
+    ticks = 0
+    while ticks < 100:
+        plane.tick()
+        ticks += 1
+        st = plane.overwatch.handle(
+            {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]
+        if st["cluster"] != placed:
+            break
+    return [("recovery_ticks_to_redispatch", float(ticks))]
+
+
+def run() -> List[tuple]:
+    rows = []
+    for n in (2, 8, 32):
+        rows += bench_plane_ops(n)
+    rows += bench_configuration_phase(8, 4)
+    rows += bench_configuration_phase(32, 4)
+    rows += bench_failure_recovery()
+    return rows

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks on CPU: blocked (lowering target) vs naive oracle,
+plus pallas-interpret parity cost. Wall numbers are CPU-only sanity signals;
+the TPU story is the roofline bench.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _t(fn, *args, n=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[tuple]:
+    from repro.kernels import ops
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, D = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, K, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, K, D), jnp.float32)
+
+    fa_blocked = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, impl="blocked"))
+    fa_naive = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, impl="naive"))
+    rows.append((f"flash_blocked[{B}x{S}x{H}x{D}]", _t(fa_blocked, q, k, v)))
+    rows.append((f"flash_naive[{B}x{S}x{H}x{D}]", _t(fa_naive, q, k, v)))
+
+    Hs, N, P = 4, 16, 32
+    x = jax.random.normal(key, (B, S, Hs, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, Hs), jnp.float32))
+    a = -jnp.exp(jax.random.normal(key, (Hs,), jnp.float32) * 0.1)
+    bm = jax.random.normal(key, (B, S, N), jnp.float32)
+    cm = jax.random.normal(key, (B, S, N), jnp.float32)
+    ssd_blocked = jax.jit(lambda *t: ops.ssd_scan(*t, impl="blocked", chunk=64))
+    ssd_naive = jax.jit(lambda *t: ops.ssd_scan(*t, impl="naive"))
+    rows.append((f"ssd_blocked[{B}x{S}x{Hs}x{P}]",
+                 _t(ssd_blocked, x, dt, a, bm, cm)))
+    rows.append((f"ssd_naive[{B}x{S}x{Hs}x{P}]",
+                 _t(ssd_naive, x, dt, a, bm, cm)))
+
+    y = jax.random.normal(key, (B, S, 256), jnp.float32)
+    sc = jnp.ones((256,), jnp.float32)
+    rn = jax.jit(lambda y, sc: ops.rmsnorm(y, sc))
+    rows.append((f"rmsnorm[{B}x{S}x256]", _t(rn, y, sc)))
+    return rows

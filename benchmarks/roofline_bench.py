@@ -1,0 +1,38 @@
+"""Roofline bench: emit the per-cell three-term table from dry-run artifacts
+(writes artifacts/roofline_{single,multi}.md + .json for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run() -> List[tuple]:
+    from repro.roofline.report import load_rows, markdown_table, to_json
+    rows_out: List[tuple] = []
+    for mesh in ("single", "multi"):
+        rows = load_rows(mesh)
+        if not rows:
+            continue
+        md = markdown_table(rows)
+        (ROOT / "artifacts" / f"roofline_{mesh}.md").write_text(md)
+        (ROOT / "artifacts" / f"roofline_{mesh}.json").write_text(
+            json.dumps(to_json(rows), indent=1))
+        worst = min(rows, key=lambda r: r.roofline_fraction)
+        best = max(rows, key=lambda r: r.roofline_fraction)
+        rows_out += [
+            (f"cells[{mesh}]", float(len(rows))),
+            (f"best_roofline_fraction[{mesh}]({best.cell})",
+             best.roofline_fraction),
+            (f"worst_roofline_fraction[{mesh}]({worst.cell})",
+             worst.roofline_fraction),
+            (f"memory_bound_cells[{mesh}]",
+             float(sum(r.dominant == "memory" for r in rows))),
+            (f"collective_bound_cells[{mesh}]",
+             float(sum(r.dominant == "collective" for r in rows))),
+            (f"compute_bound_cells[{mesh}]",
+             float(sum(r.dominant == "compute" for r in rows))),
+        ]
+    return rows_out

@@ -1,0 +1,39 @@
+"""Benchmark harness. One module per "table" (the paper is qualitative, so the
+tables are: control-plane op costs, boundary-traffic locality, the roofline
+table, kernel micro-benches, and reduced-config throughput).
+
+Prints ``name,us_per_call,derived`` CSV (derived column empty where N/A).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run control_plane roofline_bench
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = ("control_plane", "collective_locality", "roofline_bench",
+          "kernels_bench", "train_throughput")
+
+
+def main() -> int:
+    picked = sys.argv[1:] or SUITES
+    failed = 0
+    print("name,us_per_call,derived")
+    for name in picked:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                n, v, d = (row + ("",))[:3] if len(row) < 3 else row[:3]
+                d = f"{d:.4g}" if isinstance(d, float) else d
+                v = f"{v:.4g}" if isinstance(v, float) else v
+                print(f"{name}.{n},{v},{d}", flush=True)
+        except Exception:                    # noqa: BLE001
+            failed += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,52 @@
+"""Reduced-config train/serve step throughput on CPU (one row per family) +
+the Titchener local-SGD vs sync-DP step-cost comparison at equal tokens.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+
+def _steps_us(trainer, n=3) -> float:
+    trainer.step_once()                      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        trainer.step_once()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[tuple]:
+    from repro.runtime.train_loop import Trainer, TrainJobConfig
+    rows = []
+    for arch in ("qwen3-0.6b", "deepseek-moe-16b", "mamba2-2.7b", "zamba2-7b",
+                 "whisper-medium", "llama-3.2-vision-90b"):
+        tr = Trainer(TrainJobConfig(arch=arch, steps=5, seq_len=32,
+                                    global_batch=4))
+        us = _steps_us(tr)
+        toks = 4 * 32
+        rows.append((f"train_step[{arch}/reduced]", us, toks / (us / 1e6)))
+
+    sync = Trainer(TrainJobConfig(arch="qwen3-0.6b", steps=5, seq_len=32,
+                                  global_batch=8, mode="sync"))
+    us_sync = _steps_us(sync)
+    lsgd = Trainer(TrainJobConfig(arch="qwen3-0.6b", steps=5, seq_len=32,
+                                  global_batch=8, mode="local_sgd"))
+    us_round = _steps_us(lsgd)
+    H = lsgd.cfg.local_sgd.inner_steps
+    rows.append(("sync_dp_step[qwen3-0.6b]", us_sync))
+    rows.append((f"local_sgd_round[qwen3-0.6b,H={H}]", us_round,
+                 us_round / (H * us_sync)))
+
+    from repro.runtime.serve_loop import Server, ServeJobConfig
+    sv = Server(ServeJobConfig(arch="qwen3-0.6b", slots=4, max_len=64))
+    for i in range(4):
+        sv.submit([1, 2, 3], max_new=8)
+    sv.step()                                 # compile + warm
+    t0 = time.perf_counter()
+    n0 = sv.steps
+    sv.run()
+    dt = time.perf_counter() - t0
+    steps = max(sv.steps - n0, 1)
+    rows.append(("decode_step[qwen3-0.6b,slots=4]", dt / steps * 1e6,
+                 4 * steps / dt))
+    return rows

@@ -1,0 +1,64 @@
+"""Elastic + fault-tolerant training through the management plane.
+
+Timeline: dispatch a training job to a 2-cluster fleet -> kill the hosting
+cluster mid-run -> failure detector fires -> the dispatcher re-dispatches from
+the last committed checkpoint manifest -> a NEW cluster joins and is visible to
+subsequent placements. Prints the plane's op log tail as the audit trail.
+
+  PYTHONPATH=src python examples/elastic_training.py
+"""
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.runtime.elastic import ElasticController
+from repro.runtime.local_plane import JaxLocalPlane
+
+
+def add_jax_cluster(plane, name):
+    plane.add_cluster(name, local_plane=JaxLocalPlane(
+        steps_per_poll=3,
+        publish=lambda jid, man, _n=name: plane.agents[_n].ow.put(
+            f"/checkpoints/{jid}", man),
+        checkpoint_root=f"/tmp/titchener_elastic/{name}"))
+
+
+def main() -> None:
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    for n in ("zone-a", "zone-b"):
+        add_jax_cluster(plane, n)
+
+    memberships = []
+    ElasticController(plane.overwatch,
+                      lambda m: memberships.append(tuple(m)))
+
+    jid = plane.submit_job(
+        "train", arch="qwen3-0.6b", steps=12, tags={"requires": ("train",)},
+        payload={"arch": "qwen3-0.6b", "steps": 12, "seq_len": 16,
+                 "global_batch": 2, "checkpoint_every": 4})
+    # run until the first checkpoint manifest commits
+    for _ in range(40):
+        plane.tick()
+        if plane.overwatch.handle(
+                {"op": "get", "key": f"/checkpoints/{jid}"})["value"]:
+            break
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]["cluster"]
+    print(f"checkpoint committed while running on {placed}; killing it")
+    plane.fabric.partition_cluster(placed)
+
+    add_jax_cluster(plane, "zone-c")          # elastic join mid-failure
+    assert plane.run_until_done([jid], max_ticks=300)
+    st = plane.job_status(jid)
+    print(f"job finished on {st['cluster']} (progress {st['progress']}, "
+          f"loss {st.get('loss')})")
+    assert st["cluster"] != placed
+    print(f"membership transitions seen by the elastic controller: "
+          f"{len(memberships)}")
+    print("last membership:", memberships[-1])
+    print("\noverwatch op-log tail (the audit trail):")
+    for rev, op, key, _ in plane.overwatch.op_log[-5:]:
+        print(f"  rev {rev:4d} {op:7s} {key}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the single pane of glass in ~40 lines.
+
+Builds a hybrid fleet (public master + two private clusters), dispatches a
+real JAX training job and a serving job through the SAME interface, and prints
+the boundary-traffic ledger — the paper's three claims in one script.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.runtime.local_plane import JaxLocalPlane
+
+
+def main() -> None:
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    for name in ("onprem-a", "onprem-b"):
+        plane.add_cluster(name, local_plane=JaxLocalPlane(
+            publish=lambda jid, man, _n=name: plane.agents[_n].ow.put(
+                f"/checkpoints/{jid}", man),
+            checkpoint_root="/tmp/titchener_quickstart"))
+
+    train_id = plane.submit_job(
+        "train", arch="qwen3-0.6b", steps=10,
+        tags={"requires": ("train",)},
+        payload={"arch": "qwen3-0.6b", "steps": 10, "seq_len": 32,
+                 "global_batch": 4, "checkpoint_every": 5})
+    serve_id = plane.submit_job(
+        "serve", arch="qwen3-0.6b", tags={"requires": ("serve",)},
+        payload={"arch": "qwen3-0.6b", "slots": 2, "max_len": 64,
+                 "requests": [{"prompt": [1, 2, 3], "max_new": 5},
+                              {"prompt": [7, 8], "max_new": 4}]})
+
+    assert plane.run_until_done([train_id, serve_id], max_ticks=300)
+    for jid in (train_id, serve_id):
+        st = plane.job_status(jid)
+        print(f"{jid}: {st['status']} on {st['cluster']} "
+              f"(progress {st['progress']})")
+
+    rep = plane.boundary_report()
+    print(f"cross-cloud bytes: {rep['cross_cluster_bytes']:,} "
+          f"(locality {rep['locality_ratio']:.1%} local) — "
+          "the paper's thin boundary, measured")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Continuous-batching serving example: mixed prompt/generation lengths share
+decode slots; results are identical to unbatched greedy decoding.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.runtime.serve_loop import Server, ServeJobConfig
+
+
+def main() -> None:
+    server = Server(ServeJobConfig(arch="qwen3-0.6b", slots=3, max_len=96))
+    prompts = [([1, 2, 3, 4, 5], 12), ([9, 8], 4), ([7, 7, 7], 8),
+               ([2, 4, 6], 6), ([5], 10), ([3, 1, 4, 1, 5], 5)]
+    for p, n in prompts:
+        server.submit(p, max_new=n)
+    done = server.run()
+    total_new = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {total_new} tokens in "
+          f"{server.steps} batched decode steps "
+          f"(vs {total_new} unbatched steps)")
+    for r in done:
+        print(f"  {r.req_id}: {r.prompt} -> {r.generated}")
+    assert len(done) == len(prompts)
+
+
+if __name__ == "__main__":
+    main()

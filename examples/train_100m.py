@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps.
+
+Uses the qwen3-0.6b family at width 512/12L (~100M params incl. embeddings) on
+the synthetic next-token 'ramp' task; loss must fall well below the uniform
+baseline ln(1024)=6.93 — the curve is printed every 20 steps.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import dataclasses
+import math
+import time
+
+import jax
+
+from repro.configs import base as configs
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.model import Model
+from repro.data.pipeline import SyntheticTokens
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import MeshPlan
+
+
+def build_100m():
+    base = configs.get("qwen3-0.6b")
+    return dataclasses.replace(
+        base, num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+        head_dim=64, d_ff=1536, vocab_size=32_000, remat="none",
+        max_context=2048)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = build_100m()
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    model = Model(cfg, MeshPlan(mesh=make_test_mesh(), fsdp=False))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    opt = AdamWConfig(peak_lr=3e-3, warmup_steps=30, total_steps=args.steps,
+                      weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(model, opt, 1))
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                           global_batch=args.batch, task="ramp")
+
+    t0, losses = time.time(), []
+    for i in range(args.steps):
+        state, m = step_fn(state, data.global_batch_at(i))
+        losses.append(float(m["loss"]))
+        if (i + 1) % 20 == 0 or i == 0:
+            rate = args.batch * args.seq_len * (i + 1) / (time.time() - t0)
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(m['lr']):.2e}  {rate:,.0f} tok/s")
+
+    uniform = math.log(min(cfg.vocab_size, 1024))
+    print(f"\nfinal loss {losses[-1]:.3f} vs uniform {uniform:.3f}")
+    assert losses[-1] < uniform - 2.0, "model failed to learn the ramp task"
+    print("learned the next-token structure — end-to-end training works")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Sharded, async, atomically-committed checkpointing.
+
+Layout: <dir>/step_<N>/<leaf-files>.bin + manifest.json. The manifest is written
+LAST (fsync'd, then atomically renamed); a checkpoint without a manifest is
+invisible to ``latest_step`` — a crash mid-save can never corrupt restartability.
+Commit callbacks let the Titchener overwatch record the manifest (the management
+plane's "last committed checkpoint" used by the dispatcher for re-dispatch after
+pod failure).
+
+On a real multi-host fleet each process writes only its addressable shards; here
+(single process) leaves are fetched whole. The on-disk format is dtype-agnostic
+raw bytes + a JSON description, so bf16/int8 round-trip without pickle.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(_SEP.join(parts))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, use_async: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.use_async = use_async
+        self._thread: Optional[threading.Thread] = None
+        self._commit_hooks: List[Callable[[int, str], None]] = []
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------------- hooks
+    def on_commit(self, fn: Callable[[int, str], None]) -> None:
+        """fn(step, manifest_path) runs after a checkpoint becomes durable."""
+        self._commit_hooks.append(fn)
+
+    # -------------------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             blocking: bool = False) -> str:
+        """Snapshot ``tree`` (+ JSON-serializable ``extra``) at ``step``."""
+        self.wait()
+        names, leaves, _ = _flatten_with_names(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        target = os.path.join(self.directory, f"step_{step:08d}")
+
+        def write():
+            tmp = target + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            entries = {}
+            for i, (name, arr) in enumerate(zip(names, host_leaves)):
+                fname = f"leaf_{i:05d}.bin"
+                with open(os.path.join(tmp, fname), "wb") as f:
+                    f.write(arr.tobytes())
+                entries[name] = {"file": fname, "shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+            manifest = {"step": step, "leaves": entries, "extra": extra or {}}
+            mpath = os.path.join(tmp, "manifest.json")
+            with open(mpath + ".tmp", "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(mpath + ".tmp", mpath)           # manifest last = commit point
+            if os.path.exists(target):
+                shutil.rmtree(target)
+            os.rename(tmp, target)
+            self._gc()
+            for hook in self._commit_hooks:
+                hook(step, os.path.join(target, "manifest.json"))
+
+        if self.use_async and not blocking:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+        return target
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------------ restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in sorted(os.listdir(self.directory)):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, d,
+                                               "manifest.json")):
+                    out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None) -> tuple:
+        """Restore into the structure of ``like`` (tree of arrays or
+        ShapeDtypeStructs). Returns (tree, step, extra)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        target = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(target, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        names, leaves, treedef = _flatten_with_names(like)
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for name, leaf, shd in zip(names, leaves, shard_leaves):
+            ent = manifest["leaves"][name]
+            dtype = jnp.dtype(ent["dtype"])
+            with open(os.path.join(target, ent["file"]), "rb") as f:
+                arr = np.frombuffer(f.read(), dtype=dtype).reshape(ent["shape"])
+            val = jax.device_put(arr, shd) if shd is not None else jnp.asarray(arr)
+            out.append(val)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, manifest["step"], manifest["extra"]

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, get, names, register  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_is_runnable, token_inputs  # noqa: F401

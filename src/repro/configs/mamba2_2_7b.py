@@ -1,0 +1,21 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free. [arXiv:2405.21060; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    max_context=1_048_576,
+    compliance_tags=("region:any", "longctx:ok"),
+))

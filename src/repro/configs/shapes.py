@@ -1,0 +1,62 @@
+"""Assigned input-shape sets and ``input_specs()`` (ShapeDtypeStruct stand-ins).
+
+Each LM shape pairs (seq_len, global_batch) with the step it lowers:
+  * ``train_4k``     -> train_step   (forward+backward+optimizer update)
+  * ``prefill_32k``  -> prefill_step (forward, KV-cache build, last-token logits)
+  * ``decode_32k``   -> serve_step   (one new token against a seq_len KV cache)
+  * ``long_500k``    -> serve_step   (sub-quadratic archs only; see ArchConfig.sub_quadratic)
+
+No device memory is allocated here — everything is ``jax.ShapeDtypeStruct`` (the same
+pattern the dry-run uses to prove the production mesh shards without hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: str) -> Optional[str]:
+    """None if (arch, shape) is a valid dry-run cell, else a skip-reason string."""
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: 524k decode KV out of scope (DESIGN.md §5)"
+    return None
+
+
+def token_inputs(cfg: ArchConfig, spec: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs (token ids + stub-frontend embeddings where applicable)."""
+    B, S = spec.global_batch, spec.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if spec.step == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    else:
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if spec.step == "train":
+        out["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((B, S), bf16)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_frames, cfg.d_model), bf16)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), bf16)
+    return out

@@ -1,0 +1,4 @@
+# Titchener management plane — the paper's primary contribution.
+from repro.core.plane import ManagementPlane, SimLocalPlane  # noqa: F401
+from repro.core.service_graph import AppSpec, Pod, Service  # noqa: F401
+from repro.core.transport import AclTable, DeliveryError, Fabric  # noqa: F401

@@ -1,0 +1,181 @@
+"""Control agent (paper §2.v + Algorithm 5): one per cluster/pod.
+
+Responsibilities, mapped 1:1 from the paper:
+  * configuration — run Algorithm 5 over a received AppSpec CRD: DNS entries,
+    route reservation, access control for every service, then channels to the
+    master (non-master clusters only);
+  * job lifecycle — accept dispatched jobs, submit to the local control plane,
+    track execution;
+  * health/telemetry — lease-backed registration in the overwatch plus periodic
+    heartbeats carrying load, job progress and step-rate telemetry.
+
+The agent is an ordinary fabric endpoint: everything it says to the master-hosted
+overwatch crosses the thin boundary and is byte-accounted. A partitioned cluster
+stops heartbeating, its lease expires, and the dispatcher's failure detector sees
+the tombstone — no extra machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.core import gateways as GW
+from repro.core.overwatch import OverwatchClient
+from repro.core.service_graph import AppSpec
+from repro.core.transport import Address, DeliveryError, Fabric
+
+AGENT_PORT = 6000
+AGENT_IP_SUFFIX = "0.20"
+OW_TUNNEL_RANK = 9_999        # reserved gateway rank for the overwatch tunnel
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job: dict
+    status: str = "accepted"     # accepted | running | done | failed
+    progress: float = 0.0
+    rate: float = 0.0
+
+
+class ControlAgent:
+    def __init__(self, fabric: Fabric, cluster: str, idx: int, master: str,
+                 local_plane, heartbeat_interval: float = 1.0,
+                 lease_ttl: float = 3.5):
+        self.fabric = fabric
+        self.cluster = cluster
+        self.idx = idx
+        self.master = master
+        self.local_plane = local_plane
+        self.heartbeat_interval = heartbeat_interval
+        self.lease_ttl = lease_ttl
+        self.state = GW.GatewayState(cluster=cluster, idx=idx)
+        self.spec: Optional[AppSpec] = None
+        self.jobs: Dict[str, JobRecord] = {}
+        self.lease: Optional[int] = None
+        self.missed_heartbeats = 0
+        self.agent_id = f"agent@{cluster}"
+        self.addr: Address = (f"10.{idx}.{AGENT_IP_SUFFIX}", AGENT_PORT)
+        fabric.register_handler(cluster, self.addr, self._handle)
+        self.ow: Optional[OverwatchClient] = None
+
+    # -------------------------------------------------------------- bootstrapping
+    def bootstrap(self, master_state: GW.GatewayState) -> None:
+        """Initialization phase (paper §4.1): install the overwatch tunnel.
+
+        Master-cluster agents talk to the overwatch directly; private agents get
+        one bootstrap channel egw[i] -> igw[m] that forwards to the overwatch.
+        """
+        from repro.core.overwatch import OVERWATCH_IP, OVERWATCH_PORT
+        if self.cluster == self.master:
+            self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
+                                      self.master)
+            return
+        eport = GW.EPORT_BASE + OW_TUNNEL_RANK
+        iport = GW.IPORT_BASE + OW_TUNNEL_RANK
+        self.fabric.add_forward(self.master, (master_state.igw_ip, iport),
+                                (OVERWATCH_IP, OVERWATCH_PORT))
+        self.fabric.create_channel(self.cluster, (self.state.egw_ip, eport),
+                                   self.master, (master_state.igw_ip, iport))
+        self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
+                                  self.master, via=(self.state.egw_ip, eport))
+
+    def register(self) -> None:
+        """Lease-backed registration (overwatch = discovery + failure detection)."""
+        self.lease = self.ow.lease_grant(self.lease_ttl)
+        self.ow.put(f"/clusters/{self.cluster}", {
+            "idx": self.idx,
+            "capabilities": self.local_plane.capabilities(),
+            "agent_addr": list(self.addr),
+        }, lease=self.lease)
+        self._schedule_heartbeat()
+
+    # ------------------------------------------------------------- Algorithm 5
+    def configure_partition(self, spec: AppSpec,
+                            master_state: GW.GatewayState) -> None:
+        self.spec = spec
+        svc_names = sorted(s.name for s in spec.services)
+        for s in svc_names:
+            GW.add_dns_entry(self.state, spec, s)
+            GW.reserve_route(self.fabric, self.state, spec, s)
+            GW.set_access_control(self.state, spec, s)
+        GW.install_acl(self.fabric, self.state)
+        if self.cluster != self.master:
+            for s in svc_names:
+                # iport[m, s] is estimated deterministically (sorted-rank ports)
+                GW.create_channels(self.fabric, self.state, spec, s,
+                                   self.master, master_state)
+
+    # ------------------------------------------------------------- job lifecycle
+    def _handle(self, msg: dict) -> dict:
+        kind = msg.get("kind")
+        if kind == "configure":
+            self.configure_partition(msg["spec"], msg["master_state"])
+            return {"ok": True}
+        if kind == "dispatch":
+            return self.accept_job(msg["job"])
+        if kind == "cancel":
+            return self.cancel_job(msg["job_id"])
+        if kind == "drain":
+            for jid in list(self.jobs):
+                self.cancel_job(jid)
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown message {kind}"}
+
+    def accept_job(self, job: dict) -> dict:
+        """Job acceptance -> submission to the local control plane."""
+        jid = job["job_id"]
+        caps = set(self.local_plane.capabilities())
+        needs = set(job.get("tags", {}).get("requires", ()))
+        if not needs.issubset(caps):
+            return {"ok": False, "error": f"missing capabilities {needs - caps}"}
+        rec = JobRecord(job=job)
+        self.jobs[jid] = rec
+        try:
+            self.local_plane.submit(job)
+            rec.status = "running"
+        except Exception as e:               # noqa: BLE001
+            rec.status = "failed"
+            return {"ok": False, "error": str(e)}
+        self._report_job(jid)
+        return {"ok": True}
+
+    def cancel_job(self, job_id: str) -> dict:
+        if job_id in self.jobs:
+            self.local_plane.cancel(job_id)
+            self.jobs[job_id].status = "failed"
+        return {"ok": True}
+
+    # ------------------------------------------------------- heartbeat/telemetry
+    def _schedule_heartbeat(self) -> None:
+        self.fabric.call_later(self.heartbeat_interval, self.heartbeat)
+
+    def heartbeat(self) -> None:
+        try:
+            self.ow.lease_keepalive(self.lease)
+            # advance + track local jobs, then push telemetry
+            for jid, rec in self.jobs.items():
+                if rec.status != "running":
+                    continue
+                st = self.local_plane.poll(jid)
+                rec.progress, rec.rate = st["progress"], st.get("rate", 0.0)
+                if st["status"] in ("done", "failed"):
+                    rec.status = st["status"]
+                self._report_job(jid)
+            self.ow.put(f"/telemetry/{self.cluster}", {
+                "clock": self.fabric.clock,
+                "load": self.local_plane.load(),
+                "running": sum(1 for r in self.jobs.values()
+                               if r.status == "running"),
+            })
+            self.missed_heartbeats = 0
+        except (DeliveryError, RuntimeError):
+            self.missed_heartbeats += 1
+        self._schedule_heartbeat()
+
+    def _report_job(self, jid: str) -> None:
+        rec = self.jobs[jid]
+        self.ow.put(f"/jobs/{jid}/status", {
+            "cluster": self.cluster, "status": rec.status,
+            "progress": rec.progress, "rate": rec.rate,
+            "clock": self.fabric.clock,
+        })

@@ -1,0 +1,208 @@
+"""Intelligent job dispatcher (paper §2.iv) + failure detector + stragglers.
+
+Routing: a job carries tags (``requires`` capabilities, ``locality`` preference);
+the dispatcher filters registered clusters by capability, honors explicit routing
+rules (the paper's "pre-defined service routing rule"), then picks the least
+loaded by telemetry. It doubles as the pubsub message publisher of §4.1: CRD
+configuration objects are broadcast to every registered control agent.
+
+Fault tolerance: cluster registrations are lease-backed; the overwatch deletes
+them when heartbeats stop. The dispatcher watches the tombstones and re-dispatches
+the dead cluster's jobs to healthy clusters — resuming from the job's last
+committed checkpoint manifest (recorded under /checkpoints/<job>). Straggler
+mitigation compares per-job step rates against the fleet median and re-dispatches
+(or backup-dispatches) jobs that fall below a configurable fraction of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from repro.core.overwatch import OverwatchService
+from repro.core.transport import DeliveryError, Fabric
+
+
+@dataclasses.dataclass
+class RoutingRule:
+    """If ``match(job)`` then restrict candidates to ``clusters``."""
+    name: str
+    match: Callable[[dict], bool]
+    clusters: List[str]
+
+
+class Dispatcher:
+    def __init__(self, fabric: Fabric, master: str, overwatch: OverwatchService,
+                 straggler_factor: float = 0.5):
+        self.fabric = fabric
+        self.master = master
+        self.ow = overwatch
+        self.rules: List[RoutingRule] = []
+        self.straggler_factor = straggler_factor
+        self._rr = itertools.count()
+        self.dispatch_log: List[tuple] = []
+        # failure detector: watch registration tombstones
+        overwatch.watch("/clusters/", self._on_cluster_event)
+        self._down_callbacks: List[Callable[[str], None]] = []
+
+    # ---------------------------------------------------------------- directories
+    def clusters(self) -> Dict[str, dict]:
+        return {k.split("/")[-1]: v
+                for k, v in self.ow.handle({"op": "range",
+                                            "prefix": "/clusters/"})["items"].items()}
+
+    def telemetry(self) -> Dict[str, dict]:
+        return {k.split("/")[-1]: v
+                for k, v in self.ow.handle({"op": "range",
+                                            "prefix": "/telemetry/"})["items"].items()}
+
+    def _agent_addr(self, cluster: str):
+        info = self.clusters()[cluster]
+        return tuple(info["agent_addr"])
+
+    # ----------------------------------------------------------------- CRD pubsub
+    def broadcast_spec(self, spec, master_state) -> None:
+        """The pubsub publisher: push the CRD to every registered agent."""
+        for cluster, info in self.clusters().items():
+            self._send_agent(cluster, {"kind": "configure", "spec": spec,
+                                       "master_state": master_state})
+
+    def _send_agent(self, cluster: str, msg: dict) -> dict:
+        addr = self._agent_addr(cluster)
+        if cluster == self.master:
+            return self.fabric.send(self.master, "system@dispatcher",
+                                    cluster, addr, msg)
+        # master -> private agent rides the agent bootstrap channel
+        from repro.core.agent import AGENT_PORT
+        from repro.core import gateways as GW
+        idx = self.clusters()[cluster]["idx"]
+        # dispatcher reaches remote agents through a dedicated relay channel
+        relay = (f"10.{idx}.0.30", AGENT_PORT)
+        return self.fabric.send(self.master, "system@dispatcher", self.master,
+                                self._master_relay(cluster, idx, addr), msg)
+
+    def _master_relay(self, cluster: str, idx: int, agent_addr) -> tuple:
+        """Lazily create the master->agent dispatch channel (initialization)."""
+        key = ("dispatch-relay", cluster)
+        if not hasattr(self, "_relays"):
+            self._relays = {}
+        if key not in self._relays:
+            local = (f"10.200.0.{idx}", 6100)
+            ch = self.fabric.create_channel(self.master, local, cluster,
+                                            agent_addr)
+            self._relays[key] = local
+        return self._relays[key]
+
+    # ------------------------------------------------------------------- dispatch
+    def add_rule(self, rule: RoutingRule) -> None:
+        self.rules.append(rule)
+
+    def candidates(self, job: dict) -> List[str]:
+        regs = self.clusters()
+        needs = set(job.get("tags", {}).get("requires", ()))
+        cands = [c for c, info in regs.items()
+                 if needs.issubset(set(info.get("capabilities", ())))]
+        for rule in self.rules:
+            if rule.match(job):
+                cands = [c for c in cands if c in rule.clusters]
+        return sorted(cands)
+
+    def pick(self, job: dict) -> Optional[str]:
+        cands = self.candidates(job)
+        if not cands:
+            return None
+        tele = self.telemetry()
+        loads = {c: tele.get(c, {}).get("load", 0.0) for c in cands}
+        m = min(loads.values())
+        best = [c for c in cands if loads[c] == m]
+        return best[next(self._rr) % len(best)]
+
+    def submit(self, job: dict) -> str:
+        cluster = self.pick(job)
+        if cluster is None:
+            raise RuntimeError(f"no eligible cluster for job {job['job_id']} "
+                               f"(requires {job.get('tags', {})})")
+        resp = self._send_agent(cluster, {"kind": "dispatch", "job": job})
+        if not resp.get("ok"):
+            raise RuntimeError(f"dispatch failed: {resp.get('error')}")
+        self.ow.handle({"op": "put", "key": f"/jobs/{job['job_id']}/placement",
+                        "value": {"cluster": cluster, "job": job,
+                                  "clock": self.fabric.clock}})
+        self.dispatch_log.append((self.fabric.clock, job["job_id"], cluster))
+        return cluster
+
+    # ----------------------------------------------------------- failure handling
+    def on_cluster_down(self, cb: Callable[[str], None]) -> None:
+        self._down_callbacks.append(cb)
+
+    def _on_cluster_event(self, event: str, key: str, value, rev: int) -> None:
+        if event != "delete":
+            return
+        cluster = key.split("/")[-1]
+        for cb in self._down_callbacks:
+            cb(cluster)
+        self.recover_cluster_jobs(cluster)
+
+    def recover_cluster_jobs(self, dead: str) -> List[str]:
+        """Re-dispatch every job placed on a dead cluster from its last committed
+        checkpoint manifest."""
+        moved = []
+        placements = self.ow.handle(
+            {"op": "range", "prefix": "/jobs/"})["items"]
+        for key, val in placements.items():
+            if not key.endswith("/placement") or val["cluster"] != dead:
+                continue
+            jid = key.split("/")[2]
+            status = placements.get(f"/jobs/{jid}/status")
+            if status and status.get("status") == "done":
+                continue
+            job = dict(val["job"])
+            ck = self.ow.handle({"op": "get",
+                                 "key": f"/checkpoints/{jid}"})["value"]
+            if ck:
+                job["restore_from"] = ck
+            try:
+                new_cluster = self.submit(job)
+                moved.append(f"{jid}->{new_cluster}")
+            except (RuntimeError, DeliveryError):
+                self.ow.handle({"op": "put", "key": f"/jobs/{jid}/status",
+                                "value": {"cluster": None, "status": "pending",
+                                          "progress": 0.0, "rate": 0.0,
+                                          "clock": self.fabric.clock}})
+        return moved
+
+    # -------------------------------------------------------- straggler mitigation
+    def check_stragglers(self) -> List[str]:
+        """Compare per-job step rates; re-dispatch jobs below factor x median."""
+        statuses = self.ow.handle({"op": "range", "prefix": "/jobs/"})["items"]
+        rates = {}
+        for key, val in statuses.items():
+            if key.endswith("/status") and val.get("status") == "running":
+                jid = key.split("/")[2]
+                rates[jid] = (val.get("rate", 0.0), val["cluster"])
+        if len(rates) < 2:
+            return []
+        rs = sorted(r for r, _ in rates.values())
+        median = rs[len(rs) // 2]
+        moved = []
+        for jid, (rate, cluster) in rates.items():
+            if median > 0 and rate < self.straggler_factor * median:
+                job_key = f"/jobs/{jid}/placement"
+                placement = self.ow.handle({"op": "get", "key": job_key})["value"]
+                job = dict(placement["job"])
+                ck = self.ow.handle({"op": "get",
+                                     "key": f"/checkpoints/{jid}"})["value"]
+                if ck:
+                    job["restore_from"] = ck
+                # exclude the slow cluster, cancel there, re-dispatch
+                self.add_rule(RoutingRule(
+                    name=f"straggler-{jid}",
+                    match=lambda j, _jid=jid: j["job_id"] == _jid,
+                    clusters=[c for c in self.clusters() if c != cluster]))
+                try:
+                    self._send_agent(cluster, {"kind": "cancel", "job_id": jid})
+                    new_cluster = self.submit(job)
+                    moved.append(f"{jid}:{cluster}->{new_cluster}")
+                except (RuntimeError, DeliveryError):
+                    pass
+        return moved

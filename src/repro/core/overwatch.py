@@ -1,0 +1,219 @@
+"""Strongly-consistent overwatch service (paper §2.iii).
+
+A linearizable, versioned KV store with CAS, prefix ranges, leases and watches —
+the in-process stand-in for the cloud-managed RDBMS the paper assumes (Spanner/
+CloudSQL behind the same interface). Every mutation gets a monotonically
+increasing revision and lands on an op-log, so reads are trivially serializable
+and tests can assert linearizability.
+
+It is HOSTED on the master cluster: remote control agents reach it through the
+fabric (gateway channels), so overwatch traffic is part of the measured
+cross-boundary byte budget and cluster partitions make it unreachable — exactly
+the failure mode the lease-based failure detector exists for.
+
+Leases: registration keys attach to a lease; heartbeats are keepalives. A lease
+that misses its TTL expires, its keys are deleted, and watchers (the dispatcher's
+failure detector) see the tombstones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.transport import Address, Fabric
+
+OVERWATCH_PORT = 7000
+OVERWATCH_IP = "10.0.0.2"
+
+
+@dataclasses.dataclass
+class Lease:
+    lease_id: int
+    ttl: float
+    expires_at: float
+    keys: set
+
+
+class OverwatchService:
+    """The store itself (runs on the master cluster)."""
+
+    def __init__(self, fabric: Fabric, cluster: str,
+                 addr: Address = (OVERWATCH_IP, OVERWATCH_PORT)):
+        self.fabric = fabric
+        self.cluster = cluster
+        self.addr = addr
+        self._kv: Dict[str, Tuple[Any, int]] = {}
+        self._rev = 0
+        self.op_log: List[tuple] = []
+        self._leases: Dict[int, Lease] = {}
+        self._lease_ids = itertools.count(1)
+        self._watches: List[Tuple[str, Callable]] = []
+        fabric.register_handler(cluster, addr, self.handle)
+
+    # ----------------------------------------------------------------------- plumbing
+    def handle(self, req: dict) -> dict:
+        self._sweep_leases()
+        op = req["op"]
+        fn = getattr(self, "_op_" + op, None)
+        if fn is None:
+            return {"ok": False, "error": f"unknown op {op}"}
+        try:
+            return fn(req)
+        except Exception as e:              # noqa: BLE001 - surfaced to caller
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    def _bump(self, op: str, key: str, value: Any = None) -> int:
+        self._rev += 1
+        self.op_log.append((self._rev, op, key, value))
+        return self._rev
+
+    def _notify(self, event: str, key: str, value: Any, rev: int) -> None:
+        for prefix, cb in self._watches:
+            if key.startswith(prefix):
+                cb(event, key, value, rev)
+
+    def _sweep_leases(self) -> None:
+        # _notify callbacks can re-enter handle() -> _sweep_leases(); pop each
+        # expired lease BEFORE notifying so reentrant sweeps never double-free.
+        if getattr(self, "_sweeping", False):
+            return
+        self._sweeping = True
+        try:
+            now = self.fabric.clock
+            for lid in list(self._leases):
+                lease = self._leases.get(lid)
+                if lease is None or lease.expires_at > now:
+                    continue
+                del self._leases[lid]
+                for key in sorted(lease.keys):
+                    if key in self._kv:
+                        del self._kv[key]
+                        rev = self._bump("expire", key)
+                        self._notify("delete", key, None, rev)
+        finally:
+            self._sweeping = False
+
+    # --------------------------------------------------------------------------- ops
+    def _op_put(self, req: dict) -> dict:
+        key, value = req["key"], req["value"]
+        rev = self._bump("put", key, value)
+        self._kv[key] = (value, rev)
+        if "lease" in req and req["lease"]:
+            lease = self._leases.get(req["lease"])
+            if lease is None:
+                return {"ok": False, "error": "lease expired or unknown"}
+            lease.keys.add(key)
+        self._notify("put", key, value, rev)
+        return {"ok": True, "revision": rev}
+
+    def _op_get(self, req: dict) -> dict:
+        ent = self._kv.get(req["key"])
+        if ent is None:
+            return {"ok": True, "value": None, "revision": None}
+        return {"ok": True, "value": ent[0], "revision": ent[1]}
+
+    def _op_delete(self, req: dict) -> dict:
+        key = req["key"]
+        if key in self._kv:
+            del self._kv[key]
+            rev = self._bump("delete", key)
+            self._notify("delete", key, None, rev)
+            return {"ok": True, "revision": rev}
+        return {"ok": True, "revision": None}
+
+    def _op_cas(self, req: dict) -> dict:
+        """Compare-and-swap on revision (None => create-if-absent)."""
+        key, expect = req["key"], req["expect_revision"]
+        ent = self._kv.get(key)
+        cur = ent[1] if ent else None
+        if cur != expect:
+            return {"ok": True, "swapped": False, "revision": cur}
+        rev = self._bump("cas", key, req["value"])
+        self._kv[key] = (req["value"], rev)
+        self._notify("put", key, req["value"], rev)
+        return {"ok": True, "swapped": True, "revision": rev}
+
+    def _op_range(self, req: dict) -> dict:
+        prefix = req["prefix"]
+        items = {k: v for k, (v, _) in sorted(self._kv.items())
+                 if k.startswith(prefix)}
+        return {"ok": True, "items": items}
+
+    def _op_lease_grant(self, req: dict) -> dict:
+        lid = next(self._lease_ids)
+        ttl = float(req["ttl"])
+        self._leases[lid] = Lease(lid, ttl, self.fabric.clock + ttl, set())
+        return {"ok": True, "lease": lid}
+
+    def _op_lease_keepalive(self, req: dict) -> dict:
+        lease = self._leases.get(req["lease"])
+        if lease is None:
+            return {"ok": False, "error": "lease expired or unknown"}
+        lease.expires_at = self.fabric.clock + lease.ttl
+        return {"ok": True}
+
+    # ------------------------------------------------------------- local-side watches
+    def watch(self, prefix: str, cb: Callable[[str, str, Any, int], None]) -> None:
+        """Master-side components (dispatcher) subscribe to key events."""
+        self._watches.append((prefix, cb))
+
+    def sweep(self) -> None:
+        self._sweep_leases()
+
+
+class OverwatchClient:
+    """RPC stub: every call crosses the fabric from ``src_cluster`` to master."""
+
+    def __init__(self, fabric: Fabric, src_cluster: str, src_id: str,
+                 master_cluster: str,
+                 addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
+                 via: Optional[Address] = None):
+        self.fabric = fabric
+        self.src_cluster = src_cluster
+        self.src_id = src_id
+        self.master_cluster = master_cluster
+        self.addr = addr
+        # remote agents reach the overwatch through their egress gateway mapping
+        self.via = via
+
+    def _call(self, req: dict) -> dict:
+        if self.src_cluster == self.master_cluster:
+            resp = self.fabric.send(self.src_cluster, self.src_id,
+                                    self.master_cluster, self.addr, req)
+        else:
+            if self.via is None:
+                raise RuntimeError(
+                    "remote overwatch access requires a gateway route (via=)")
+            resp = self.fabric.send(self.src_cluster, self.src_id,
+                                    self.src_cluster, self.via, req)
+        if not resp.get("ok", False):
+            raise RuntimeError(f"overwatch: {resp.get('error')}")
+        return resp
+
+    def put(self, key: str, value: Any, lease: Optional[int] = None) -> int:
+        return self._call({"op": "put", "key": key, "value": value,
+                           "lease": lease})["revision"]
+
+    def get(self, key: str) -> Any:
+        return self._call({"op": "get", "key": key})["value"]
+
+    def get_with_revision(self, key: str):
+        r = self._call({"op": "get", "key": key})
+        return r["value"], r["revision"]
+
+    def delete(self, key: str) -> None:
+        self._call({"op": "delete", "key": key})
+
+    def cas(self, key: str, value: Any, expect_revision) -> bool:
+        return self._call({"op": "cas", "key": key, "value": value,
+                           "expect_revision": expect_revision})["swapped"]
+
+    def range(self, prefix: str) -> Dict[str, Any]:
+        return self._call({"op": "range", "prefix": prefix})["items"]
+
+    def lease_grant(self, ttl: float) -> int:
+        return self._call({"op": "lease_grant", "ttl": ttl})["lease"]
+
+    def lease_keepalive(self, lease: int) -> None:
+        self._call({"op": "lease_keepalive", "lease": lease})

@@ -1,0 +1,140 @@
+"""ManagementPlane — the single pane of glass (paper §2).
+
+One object through which users do everything: register clusters, upload the
+application CRD, submit jobs, read statuses, inject faults (tests), and read the
+cross-boundary byte ledger. Internally it wires the fabric, the master cluster,
+the overwatch, the dispatcher, and one control agent per cluster — users never
+touch those directly, which is precisely the paper's UX claim.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core.agent import ControlAgent
+from repro.core.dispatcher import Dispatcher, RoutingRule
+from repro.core.overwatch import OverwatchService
+from repro.core.service_graph import AppSpec
+from repro.core.transport import Fabric
+
+
+class SimLocalPlane:
+    """Deterministic local control plane for management-plane tests: jobs advance
+    ``rate`` progress-units per clock tick (no JAX). The runtime package provides
+    the real JAX-executing local plane with the same interface."""
+
+    def __init__(self, caps=("cpu",), rate: float = 1.0):
+        self._caps = tuple(caps)
+        self.rate = rate
+        self.jobs: Dict[str, dict] = {}
+
+    def capabilities(self):
+        return self._caps
+
+    def submit(self, job: dict) -> None:
+        start = float(job.get("restore_from", {}).get("progress", 0.0) or 0.0)
+        self.jobs[job["job_id"]] = {"job": job, "progress": start,
+                                    "status": "running"}
+
+    def cancel(self, job_id: str) -> None:
+        if job_id in self.jobs:
+            self.jobs[job_id]["status"] = "failed"
+
+    def poll(self, job_id: str) -> dict:
+        rec = self.jobs[job_id]
+        if rec["status"] == "running":
+            rec["progress"] += self.rate
+            total = float(rec["job"].get("steps", 10))
+            if rec["progress"] >= total:
+                rec["progress"] = total
+                rec["status"] = "done"
+        return {"progress": rec["progress"], "status": rec["status"],
+                "rate": self.rate if rec["status"] == "running" else 0.0}
+
+    def load(self) -> float:
+        return sum(1.0 for r in self.jobs.values() if r["status"] == "running")
+
+
+class ManagementPlane:
+    def __init__(self, master: str = "master"):
+        self.fabric = Fabric()
+        self.master = master
+        self._idx = itertools.count(1)
+        self.agents: Dict[str, ControlAgent] = {}
+        self.overwatch = OverwatchService(self.fabric, master)
+        self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
+        self.spec: Optional[AppSpec] = None
+        self._job_ids = itertools.count(1)
+        # master hosts its own agent (idx 0)
+        self._master_agent = None
+
+    # ------------------------------------------------------------------- clusters
+    def add_cluster(self, name: str, local_plane=None,
+                    is_master: bool = False) -> ControlAgent:
+        if local_plane is None:
+            local_plane = SimLocalPlane()
+        idx = 0 if is_master else next(self._idx)
+        agent = ControlAgent(self.fabric, name, idx, self.master, local_plane)
+        self.agents[name] = agent
+        if is_master:
+            self._master_agent = agent
+        master_state = (self._master_agent.state if self._master_agent
+                        else agent.state)
+        agent.bootstrap(master_state)
+        agent.register()
+        return agent
+
+    @property
+    def master_agent(self) -> ControlAgent:
+        return self._master_agent
+
+    # ------------------------------------------------------------------ app config
+    def upload_spec(self, spec: AppSpec) -> None:
+        """Validate + broadcast the CRD to every agent (configuration phase)."""
+        spec.validate(list(self.agents))
+        self.spec = spec
+        self.overwatch.handle({"op": "put", "key": "/config/appspec",
+                               "value": {"services": len(spec.services),
+                                         "pods": len(spec.pods)}})
+        self.dispatcher.broadcast_spec(spec, self._master_agent.state)
+
+    # ------------------------------------------------------------------ job surface
+    def submit_job(self, kind: str, *, arch: str = "", steps: int = 10,
+                   tags: Optional[dict] = None, job_id: Optional[str] = None,
+                   payload: Optional[dict] = None) -> str:
+        jid = job_id or f"job-{next(self._job_ids):04d}"
+        job = {"job_id": jid, "kind": kind, "arch": arch, "steps": steps,
+               "tags": tags or {}, "payload": payload or {}}
+        self.dispatcher.submit(job)
+        return jid
+
+    def job_status(self, job_id: str) -> Optional[dict]:
+        return self.overwatch.handle(
+            {"op": "get", "key": f"/jobs/{job_id}/status"})["value"]
+
+    def add_routing_rule(self, rule: RoutingRule) -> None:
+        self.dispatcher.add_rule(rule)
+
+    # -------------------------------------------------------------------- operation
+    def tick(self, dt: float = 1.0, n: int = 1) -> None:
+        for _ in range(n):
+            self.fabric.tick(dt)
+            self.overwatch.sweep()
+
+    def run_until_done(self, job_ids: List[str], max_ticks: int = 200) -> bool:
+        for _ in range(max_ticks):
+            self.tick()
+            st = [self.job_status(j) for j in job_ids]
+            if all(s and s["status"] == "done" for s in st):
+                return True
+        return False
+
+    # ------------------------------------------------------------------ observation
+    def boundary_report(self) -> dict:
+        f = self.fabric
+        return {
+            "cross_cluster_bytes": f.cross_cluster_bytes(),
+            "local_bytes": sum(f.local_bytes.values()),
+            "locality_ratio": f.locality_ratio(),
+            "per_edge": dict(f.cross_bytes),
+        }

@@ -1,0 +1,228 @@
+"""Simulated inter-cluster fabric (the paper's network substrate, §4.1).
+
+Models exactly the connectivity regime the paper assumes:
+
+  * Within a cluster: any endpoint can reach any (ip, port) — fast local network
+    (the ICI/intra-cluster path).
+  * Across clusters: NO direct reachability. The only cross-cluster transport is a
+    ``Channel`` (the SSH/port-forwarding tunnel of Algorithm 4), pinned to gateway
+    endpoints. Traffic that is not routed through a configured gateway chain simply
+    does not arrive — mirroring real firewalled private clouds.
+  * Access control: default-deny pod->service tables (Algorithm 3) enforced at
+    send time.
+
+Delivery is synchronous and deterministic; a simulated clock (``tick``) drives
+lease expiry and heartbeat scheduling in the layers above. Per-edge byte counters
+make the paper's "thin cross-boundary traffic" claim measurable
+(``cross_cluster_bytes`` vs ``local_bytes``), and fault injection (partition a
+cluster, kill a channel) drives the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import Counter, defaultdict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+Address = Tuple[str, int]            # (ip, port)
+
+
+class DeliveryError(Exception):
+    """Raised when the fabric cannot deliver a message (no route / denied / down)."""
+
+
+@dataclasses.dataclass
+class Channel:
+    """A cross-cluster tunnel between two gateway endpoints (Algorithm 4)."""
+    channel_id: int
+    cluster_a: str
+    addr_a: Address
+    cluster_b: str
+    addr_b: Address
+    alive: bool = True
+    bytes_ab: int = 0
+    bytes_ba: int = 0
+
+    def other_end(self, cluster: str, addr: Address):
+        if (cluster, addr) == (self.cluster_a, self.addr_a):
+            return self.cluster_b, self.addr_b
+        if (cluster, addr) == (self.cluster_b, self.addr_b):
+            return self.cluster_a, self.addr_a
+        return None
+
+
+def _payload_bytes(payload: Any) -> int:
+    if isinstance(payload, (bytes, bytearray)):
+        return len(payload)
+    if isinstance(payload, str):
+        return len(payload.encode())
+    if isinstance(payload, dict):
+        return sum(_payload_bytes(k) + _payload_bytes(v)
+                   for k, v in payload.items())
+    if isinstance(payload, (list, tuple)):
+        return sum(_payload_bytes(v) for v in payload)
+    if isinstance(payload, (int, float, bool)) or payload is None:
+        return 8
+    return 64  # opaque object envelope
+
+
+class Fabric:
+    """The hybrid-cloud network: clusters, gateways, channels, ACLs, a clock."""
+
+    def __init__(self):
+        self.clock: float = 0.0
+        self._handlers: Dict[Tuple[str, Address], Callable] = {}
+        self._forwards: Dict[Tuple[str, Address], Address] = {}
+        self._channels: Dict[Tuple[str, Address], Channel] = {}
+        self._channel_ids = itertools.count(1)
+        self.channels: Dict[int, Channel] = {}
+        self._partitioned: set = set()           # clusters cut off from everything
+        self._acl: Dict[str, "AclTable"] = {}
+        self.local_bytes: Counter = Counter()    # per-cluster intra bytes
+        self.cross_bytes: Counter = Counter()    # per (src, dst) cluster pair
+        self.message_log: list = []
+        self._timers: list = []                  # (deadline, callback) heap-ish
+
+    # ------------------------------------------------------------------- topology
+    def register_handler(self, cluster: str, addr: Address,
+                         handler: Callable[[Any], Any]) -> None:
+        self._handlers[(cluster, addr)] = handler
+
+    def add_forward(self, cluster: str, src: Address, dst: Address) -> None:
+        """Istio-style in-cluster forwarding rule src -> dst (Algorithm 2)."""
+        self._forwards[(cluster, src)] = dst
+
+    def remove_forward(self, cluster: str, src: Address) -> None:
+        self._forwards.pop((cluster, src), None)
+
+    def create_channel(self, cluster_a: str, addr_a: Address, cluster_b: str,
+                       addr_b: Address) -> Channel:
+        ch = Channel(next(self._channel_ids), cluster_a, addr_a, cluster_b,
+                     addr_b)
+        self._channels[(cluster_a, addr_a)] = ch
+        self._channels[(cluster_b, addr_b)] = ch
+        self.channels[ch.channel_id] = ch
+        return ch
+
+    def set_acl(self, cluster: str, table: "AclTable") -> None:
+        self._acl[cluster] = table
+
+    # ------------------------------------------------------------- fault injection
+    def partition_cluster(self, cluster: str) -> None:
+        self._partitioned.add(cluster)
+
+    def heal_cluster(self, cluster: str) -> None:
+        self._partitioned.discard(cluster)
+
+    def kill_channel(self, channel_id: int) -> None:
+        self.channels[channel_id].alive = False
+
+    def revive_channel(self, channel_id: int) -> None:
+        self.channels[channel_id].alive = True
+
+    # ------------------------------------------------------------------------ time
+    def tick(self, dt: float = 1.0) -> None:
+        self.clock += dt
+        due = [t for t in self._timers if t[0] <= self.clock]
+        self._timers = [t for t in self._timers if t[0] > self.clock]
+        for _, cb in sorted(due, key=lambda t: t[0]):
+            cb()
+
+    def call_later(self, delay: float, cb: Callable[[], None]) -> None:
+        self._timers.append((self.clock + delay, cb))
+
+    # -------------------------------------------------------------------- delivery
+    def send(self, src_cluster: str, src_id: str, cluster: str, addr: Address,
+             payload: Any, _hops: int = 0) -> Any:
+        """Send from a component (pod/agent) to an in-cluster (ip, port).
+
+        Cross-cluster reachability exists ONLY through channels installed on the
+        path via forwarding rules. Returns the handler's response.
+        """
+        if _hops > 16:
+            raise DeliveryError(f"routing loop at {cluster}:{addr}")
+        if src_cluster in self._partitioned or cluster in self._partitioned:
+            raise DeliveryError(f"cluster partitioned: {src_cluster}->{cluster}")
+        if src_cluster != cluster:
+            raise DeliveryError(
+                f"no direct cross-cluster route {src_cluster}->{cluster}; "
+                "flows must traverse gateway channels (Algorithm 4)")
+
+        acl = self._acl.get(cluster)
+        if acl is not None and _hops == 0 and not acl.allowed(src_id, addr):
+            raise DeliveryError(
+                f"ACL deny: {src_id} -> {cluster}:{addr} (Algorithm 3)")
+
+        nbytes = _payload_bytes(payload)
+        self.local_bytes[cluster] += nbytes
+        self.message_log.append((self.clock, src_cluster, src_id, cluster, addr))
+
+        # channel endpoint? hop across the boundary
+        ch = self._channels.get((cluster, addr))
+        if ch is not None:
+            if not ch.alive:
+                raise DeliveryError(f"channel {ch.channel_id} down")
+            other = ch.other_end(cluster, addr)
+            assert other is not None
+            o_cluster, o_addr = other
+            if o_cluster in self._partitioned:
+                raise DeliveryError(f"cluster partitioned: {o_cluster}")
+            if (cluster, addr) == (ch.cluster_a, ch.addr_a):
+                ch.bytes_ab += nbytes
+            else:
+                ch.bytes_ba += nbytes
+            self.cross_bytes[(cluster, o_cluster)] += nbytes
+            return self._deliver_local(o_cluster, o_addr, src_id, payload,
+                                       _hops + 1)
+
+        return self._deliver_local(cluster, addr, src_id, payload, _hops)
+
+    def _deliver_local(self, cluster: str, addr: Address, src_id: str,
+                       payload: Any, hops: int) -> Any:
+        # follow in-cluster forwarding rules (gateway port maps)
+        seen = set()
+        while (cluster, addr) in self._forwards:
+            if (cluster, addr) in seen:
+                raise DeliveryError(f"forward loop in {cluster} at {addr}")
+            seen.add((cluster, addr))
+            addr = self._forwards[(cluster, addr)]
+            ch = self._channels.get((cluster, addr))
+            if ch is not None:
+                return self.send(cluster, f"gw@{cluster}", cluster, addr,
+                                 payload, _hops=hops + 1)
+        handler = self._handlers.get((cluster, addr))
+        if handler is None:
+            raise DeliveryError(f"no endpoint at {cluster}:{addr}")
+        return handler(payload)
+
+    # ------------------------------------------------------------------ accounting
+    def cross_cluster_bytes(self) -> int:
+        return sum(self.cross_bytes.values())
+
+    def locality_ratio(self) -> float:
+        """Fraction of all bytes that stayed inside a cluster (paper's claim: ~1)."""
+        local = sum(self.local_bytes.values())
+        cross = self.cross_cluster_bytes()
+        return local / max(local + cross, 1)
+
+
+class AclTable:
+    """Default-deny pod->(ip, port) table (Algorithm 3)."""
+
+    def __init__(self):
+        self._allowed: set = set()
+        self._exempt_prefixes = ("gw@", "agent@", "system@")
+
+    def allow(self, src_id: str, addr: Address) -> None:
+        self._allowed.add((src_id, addr))
+
+    def block_all(self, addr: Address) -> None:
+        self._allowed = {(s, a) for (s, a) in self._allowed if a != addr}
+
+    def allowed(self, src_id: str, addr: Address) -> bool:
+        if any(src_id.startswith(p) for p in self._exempt_prefixes):
+            return True                     # infra components, not app pods
+        return (src_id, addr) in self._allowed
+
+    def entries(self) -> set:
+        return set(self._allowed)

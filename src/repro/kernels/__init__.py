@@ -1,0 +1,2 @@
+# Perf-critical compute layers of the managed substrate (DESIGN.md §6):
+# flash_attention, ssd_scan, rmsnorm — each: pallas kernel + ops.py wrapper + ref.py oracle.

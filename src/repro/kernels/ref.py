@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every kernel. Naive, O(S^2)-memory where applicable —
+small shapes only; tests assert_allclose kernels (interpret=True) against these."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Sq,H,D], k/v [B,Skv,K,D] -> [B,Sq,H,D]. Naive masked softmax attention.
+
+    For decode (Sq=1 against a prefix cache) set causal=False and pass the valid
+    prefix only."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    group = H // K
+    kk = jnp.repeat(k, group, axis=2)
+    vv = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        # align ends: q token i sits at absolute position i + (Skv - Sq)
+        mask = mask & (k_pos <= q_pos + (Skv - Sq))
+    if window > 0:
+        mask = mask & (q_pos + (Skv - Sq) - k_pos < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """Naive per-timestep SSD recurrence (the oracle for ssd_scan).
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t
+    x [B,S,H,P], dt [B,S,H], a [H], bm/cm [B,S,N] -> y [B,S,H,P], final h [B,H,N,P]
+    """
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = bm.astype(jnp.float32), cm.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * af[None, :])                        # [B,H]
+        inject = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        h = h * decay[..., None, None] + inject                   # [B,H,N,P]
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                    # [B,S,H,P]
+    return y, h
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

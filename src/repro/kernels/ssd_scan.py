@@ -1,0 +1,89 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+Per (batch, head) the sequence is split into chunks of Q tokens. Within a chunk the
+"dual" quadratic form runs on the MXU (a [Q, Q] decay-masked score matmul); across
+chunks a [N, P] state recurrence is carried in VMEM scratch — the innermost grid dim
+(chunk index) is sequential on TPU, so the scratch state plays the role of the
+recurrent carry with zero HBM round-trips.
+
+Inputs (single B/C group, as mamba2 uses G=1):
+  x  [B, S, H, P]   token inputs per head
+  dt [B, S, H]      softplus-activated timestep (>0)
+  A  [H]            negative decay rate per head (A < 0)
+  Bm [B, S, N]      input projection onto state
+  Cm [B, S, N]      state readout
+Output: y [B, S, H, P], plus (optionally, via ops.py) the final state [B, H, N, P].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    a = a_ref[0].astype(jnp.float32)                 # scalar (this head)
+    bm = b_ref[0, :, :].astype(jnp.float32)          # [Q, N]
+    cm = c_ref[0, :, :].astype(jnp.float32)          # [Q, N]
+
+    dta = dt * a                                     # [Q] (negative)
+    cum = jnp.cumsum(dta)                            # inclusive cumsum
+    seg_total = cum[-1]
+
+    # intra-chunk dual form: L[i, j] = exp(cum[i] - cum[j]) for i >= j
+    li = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = iota_i >= iota_j
+    decay = jnp.where(causal, jnp.exp(li), 0.0)      # [Q, Q]
+    scores = (cm @ bm.T) * decay                     # [Q, Q]
+    xdt = x * dt[:, None]                            # [Q, P]
+    y_intra = scores @ xdt                           # [Q, P]
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                           # [N, P] f32
+    y_inter = jnp.exp(cum)[:, None] * (cm @ state)   # [Q, P]
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(sum dta) h + sum_j exp(cum[-1]-cum[j]) dt_j B_j x_j^T
+    w = jnp.exp(seg_total - cum) * dt                # [Q]
+    new_state = jnp.exp(seg_total) * state + (bm * w[:, None]).T @ x  # [N, P]
+    state_ref[...] = new_state
+
+
+def ssd_scan_pallas(x, dt, a, bm, cm, *, chunk: int = 256, interpret: bool = False):
+    """See module docstring. S must be divisible by ``chunk`` (ops.py pads)."""
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: prove the production mesh shards every (arch x shape) cell.
+
+For each cell this lowers + compiles the assigned step on
+  * the single-pod mesh  (data=16, model=16)  = 256 chips, and
+  * the multi-pod mesh   (pod=2, data=16, model=16) = 512 chips,
+prints ``compiled.memory_analysis()`` (proves the per-device footprint) and
+``compiled.cost_analysis()`` (XLA's view), runs the while-aware HLO accounting
+(repro.roofline.hlo_stats — XLA's cost analysis does not multiply scanned layer
+stacks), and writes one JSON artifact per cell under artifacts/dryrun/<mesh>/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --skip-existing
+  ... --set sp=true --set num_microbatches=4 --tag sp_on       # hillclimb variants
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base as configs
+from repro.configs.shapes import SHAPES, cell_is_runnable
+from repro.launch.mesh import CHIPS_PER_POD, make_production_mesh
+from repro.launch.steps import CellOptions, build_cell
+from repro.roofline.hlo_stats import module_stats, stats_to_json
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_json(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    return {f: getattr(ma, f, 0) for f in fields}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, opts: CellOptions,
+             tag: str = "baseline", verbose: bool = True) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, opts)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    st = module_stats(text, pod_size=CHIPS_PER_POD,
+                      n_devices=mesh.devices.size)
+
+    rec = {
+        "cell": f"{arch}/{shape}",
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "tag": tag,
+        "step": cell.spec.step,
+        "chips": int(mesh.devices.size),
+        "options": {**dataclasses.asdict(opts),
+                    "extra": dict(opts.extra)},
+        "timings_s": {"lower": round(t_lower, 2),
+                      "compile": round(t_compile, 2)},
+        "memory_analysis": _mem_json(ma),
+        "xla_cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")
+                              if k in ca},
+        "hlo_stats": stats_to_json(st),
+        "hlo_text_bytes": len(text),
+        "params": cell.cfg.param_count(),
+        "active_params": cell.cfg.active_param_count(),
+        "tokens_per_step": (cell.spec.global_batch *
+                            (cell.spec.seq_len
+                             if cell.spec.step != "decode" else 1)),
+    }
+    if verbose:
+        mm = rec["memory_analysis"]
+        per_dev = (mm.get("argument_size_in_bytes", 0)
+                   + mm.get("temp_size_in_bytes", 0)
+                   + mm.get("output_size_in_bytes", 0)
+                   - mm.get("alias_size_in_bytes", 0))
+        print(f"  memory_analysis: {mm}")
+        print(f"  -> bytes/device ~ {per_dev/1e9:.2f} GB")
+        print(f"  cost_analysis(XLA): {rec['xla_cost_analysis']}")
+        hs = rec["hlo_stats"]
+        print(f"  hlo_stats (while-aware, per device): "
+              f"flops={hs['flops']:.3e} hbm={hs['hbm_bytes']:.3e} "
+              f"coll={hs['collective_bytes']:.3e} "
+              f"(dcn={hs['cross_pod_bytes']:.3e})")
+    return rec
+
+
+def artifact_path(arch: str, shape: str, mesh_kind: str,
+                  tag: str = "baseline") -> Path:
+    d = ARTIFACTS / mesh_kind
+    d.mkdir(parents=True, exist_ok=True)
+    suffix = "" if tag == "baseline" else f"__{tag}"
+    return d / f"{arch}__{shape}{suffix}.json"
+
+
+def parse_set(kvs) -> CellOptions:
+    opts = {}
+    for kv in kvs or ():
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        elif v.lstrip("-").isdigit():
+            v = int(v)
+        else:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        opts[k] = v
+    known = {f.name for f in dataclasses.fields(CellOptions)}
+    extra = tuple((k, v) for k, v in opts.items() if k not in known)
+    kwargs = {k: v for k, v in opts.items() if k in known}
+    if extra:
+        kwargs["extra"] = extra
+    return CellOptions(**kwargs)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", help="arch id (repeatable)")
+    ap.add_argument("--shape", action="append", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--set", action="append", dest="sets", metavar="K=V",
+                    help="CellOptions override, e.g. --set sp=true")
+    ap.add_argument("--tag", default="baseline",
+                    help="artifact tag (hillclimb variants)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    opts = parse_set(args.sets)
+    archs = args.arch or configs.names()
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    failures = []
+    for arch in archs:
+        cfg = configs.get(arch)
+        for shape in shapes:
+            reason = cell_is_runnable(cfg, shape)
+            if reason:
+                print(f"SKIP {arch}/{shape}: {reason}")
+                n_skip += 1
+                continue
+            for mesh_kind in meshes:
+                path = artifact_path(arch, shape, mesh_kind, args.tag)
+                if args.skip_existing and path.exists():
+                    n_ok += 1
+                    continue
+                print(f"=== {arch}/{shape} [{mesh_kind}] tag={args.tag}",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, opts, args.tag)
+                    path.write_text(json.dumps(rec, indent=1))
+                    print(f"  wrote {path} "
+                          f"(lower {rec['timings_s']['lower']}s, "
+                          f"compile {rec['timings_s']['compile']}s)",
+                          flush=True)
+                    n_ok += 1
+                except Exception as e:        # noqa: BLE001
+                    n_fail += 1
+                    failures.append((arch, shape, mesh_kind, repr(e)))
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+    print(f"\ndry-run summary: ok={n_ok} skip={n_skip} fail={n_fail}")
+    for f in failures:
+        print("  FAIL", *f)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

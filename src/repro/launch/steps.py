@@ -1,0 +1,346 @@
+"""Jit-able train / prefill / decode steps + their shardings, per (arch x shape).
+
+``build_cell`` is the single entry used by the dry-run, the roofline benches and the
+hillclimb: it binds (ArchConfig, ShapeSpec, Mesh, CellOptions) to a jitted step with
+explicit in/out shardings and returns everything needed to ``.lower()`` it with
+ShapeDtypeStruct stand-ins (no device memory).
+
+Step semantics per the assignment:
+  * train_4k     -> train_step(state, batch)          fwd+bwd+AdamW, microbatched
+  * prefill_32k  -> prefill_step(params, batch)       KV/state cache build
+  * decode_32k   -> decode_step(params, tokens, cache) one token, cache donated
+  * long_500k    -> decode_step (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as configs
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_is_runnable, token_inputs
+from repro.models.model import Model
+from repro.optim.adamw import (AdamWConfig, abstract_opt_state, adamw_update,
+                               init_opt_state, opt_state_specs)
+from repro.parallel.sharding import MeshPlan, constrain
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOptions:
+    """Hillclimb knobs. Defaults = the paper-faithful baseline configuration."""
+    fsdp: bool = True
+    sp: bool = False                   # sequence-parallel residual stream
+    bf16_reduce: bool = False          # bf16 partial-sum dots / TP all-reduces
+    dp_only: bool = False              # batch over ALL axes, no TP (small models)
+    moe_combine_reshard: bool = False  # a2a slot buffers before MoE combine
+    titchener: bool = False            # lower the local-SGD round (train cells)
+    num_microbatches: int = 0          # 0 = auto (see _auto_microbatches)
+    remat: Optional[str] = None        # override ArchConfig.remat
+    accum_dtype: str = "float32"
+    capacity_factor: float = 0.0       # >0 overrides the MoE capacity factor
+    loss_chunk: int = 0                # >0: chunked CE (see Model._chunked_ce)
+    packed_decode: bool = False        # GQA decode attn w/o repeat/f32 copy
+    zero2_accum: bool = False          # opt-sharded (pod-spread) grad accum
+    donate: bool = True
+    extra: Tuple[Tuple[str, Any], ...] = ()   # free-form knob ledger for §Perf
+
+
+def _auto_microbatches(cfg: ArchConfig, spec: ShapeSpec) -> int:
+    if spec.step != "train":
+        return 1
+    # keep per-device live activations ~O(layers x mb x seq x d_model / mesh)
+    return 8 if spec.global_batch >= 64 else 1
+
+
+# ------------------------------------------------------------------------- shardings
+def batch_pspecs(plan: MeshPlan, cfg: ArchConfig,
+                 inputs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, P]:
+    logical = {
+        "tokens": ("batch", "seq"),
+        "targets": ("batch", "seq"),
+        "loss_mask": ("batch", "seq"),
+        "frames": ("batch", None, None),
+        "patches": ("batch", None, None),
+    }
+    return {k: plan.spec(logical[k], v.shape) for k, v in inputs.items()}
+
+
+def named(mesh: Mesh, tree):
+    return tmap(lambda s: NamedSharding(mesh, s), tree,
+                is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------- train step
+def make_train_step(model: Model, opt_cfg: AdamWConfig, num_microbatches: int,
+                    zero2_accum: bool = False, accum_dtype: str = "float32"):
+    """(state, batch) -> (state, metrics); grads accumulated over microbatches.
+
+    ``zero2_accum`` shards the f32 grad accumulator like the OPTIMIZER state
+    (ZeRO-2): with a pod axis, a param-spec accumulator is pod-REPLICATED, so
+    every microbatch pays a pod (DCN) all-reduce; the opt-spec accumulator is
+    pod-sharded, turning that into per-microbatch reduce-scatters and moving
+    the grads exactly where adamw_update consumes them (§Perf cell 2 it.2).
+    """
+    plan, cfg = model.plan, model.cfg
+    M = num_microbatches
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: Dict[str, jax.Array]):
+        params, opt = state["params"], state["opt"]
+        if M <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = tmap(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mb = tmap(lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                      batch)
+            if zero2_accum:
+                from repro.models.params import is_def, param_defs
+                specs = tmap(lambda d: plan.opt_spec(d.logical, d.shape),
+                             param_defs(cfg), is_leaf=is_def)
+            else:
+                specs = model.param_specs()
+            acc_dt = jnp.dtype(accum_dtype)
+            zeros = tmap(lambda p, s: jax.lax.with_sharding_constraint(
+                jnp.zeros(p.shape, acc_dt), NamedSharding(plan.mesh, s)),
+                params, specs)
+
+            def acc(carry, b):
+                g_acc, loss_acc, tok_acc = carry
+                (_, m), g = grad_fn(params, b)
+                g_acc = tmap(
+                    lambda a, gi, s: jax.lax.with_sharding_constraint(
+                        a + gi.astype(acc_dt),
+                        NamedSharding(plan.mesh, s)),
+                    g_acc, g, specs)
+                return (g_acc, loss_acc + m["loss"], tok_acc + m["tokens"]), None
+
+            (grads, loss_sum, tok_sum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32),
+                      jnp.zeros((), jnp.float32)), mb)
+            grads = tmap(lambda g: g.astype(jnp.float32) / M, grads)
+            metrics = {"loss": loss_sum / M, "tokens": tok_sum,
+                       "aux_loss": jnp.zeros((), jnp.float32)}
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, opt,
+                                                        opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_state_specs(cfg: ArchConfig, plan: MeshPlan) -> dict:
+    from repro.models.params import partition_specs
+    return {"params": partition_specs(cfg, plan),
+            "opt": opt_state_specs(cfg, plan)}
+
+
+def abstract_train_state(cfg: ArchConfig) -> dict:
+    from repro.models.params import abstract_params
+    return {"params": abstract_params(cfg), "opt": abstract_opt_state(cfg)}
+
+
+def init_train_state(model: Model, key) -> dict:
+    params = model.init_params(key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+# --------------------------------------------------------------------------- serving
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params: dict, batch: Dict[str, jax.Array]):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params: dict, tokens: jax.Array, cache: dict):
+        return model.decode_step(params, tokens, cache)
+    return decode_step
+
+
+# ------------------------------------------------------- Titchener local-SGD cell
+def _build_titchener_cell(cfg, spec, mesh, plan, opts, opt_cfg) -> "Cell":
+    """Lower one local-SGD ROUND (H pod-local AdamW steps + compressed pod-axis
+    delta exchange) instead of one sync-DP step. Normalization for §Perf: the
+    round consumes the same tokens as one baseline step (H x Bp x P x seq =
+    global_batch x seq), so DCN bytes/round compare 1:1 with DCN bytes/step."""
+    import jax.numpy as jnp
+    from repro.models.params import (abstract_params, is_def, param_defs,
+                                     partition_specs)
+    from repro.optim.local_sgd import (LocalSGDConfig, make_round_fn,
+                                       pod_free_plan)
+    extra = dict(opts.extra)
+    P_pods = mesh.shape.get("pod", 1)
+    H = int(extra.get("inner_steps", 8))
+    lcfg = LocalSGDConfig(inner_steps=H,
+                          compress=bool(extra.get("compress", True)))
+    pf = pod_free_plan(plan)
+    model = Model(cfg, pf)
+    round_fn = make_round_fn(model.loss_fn, opt_cfg, lcfg,
+                             spmd_axis="pod" if P_pods > 1 else None,
+                             mesh=mesh)
+
+    params_abs = abstract_params(cfg)
+    pspecs = partition_specs(cfg, pf)
+    f32 = jnp.float32
+
+    def stack_abs(t, dtype=None):
+        return tmap(lambda a: jax.ShapeDtypeStruct(
+            (P_pods,) + a.shape, dtype or a.dtype), t)
+
+    def stack_spec(t):
+        return tmap(lambda s: jax.sharding.PartitionSpec("pod", *s), t,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    state_abs = {
+        "pod_params": stack_abs(params_abs),
+        "pod_opt": {"m": stack_abs(params_abs, f32),
+                    "v": stack_abs(params_abs, f32),
+                    "master": stack_abs(params_abs, f32),
+                    "step": jax.ShapeDtypeStruct((P_pods,), jnp.int32)},
+        "master": tmap(lambda a: jax.ShapeDtypeStruct(a.shape, f32),
+                       params_abs),
+        "momentum": tmap(lambda a: jax.ShapeDtypeStruct(a.shape, f32),
+                         params_abs),
+        "ef": stack_abs(params_abs, f32),
+        "round": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    global_spec = tmap(lambda d: pf.spec(d.logical, d.shape),
+                       param_defs(cfg), is_leaf=is_def)
+    state_specs = {
+        "pod_params": stack_spec(pspecs),
+        "pod_opt": {"m": stack_spec(pspecs), "v": stack_spec(pspecs),
+                    "master": stack_spec(pspecs),
+                    "step": jax.sharding.PartitionSpec("pod")},
+        "master": global_spec,
+        "momentum": global_spec,
+        "ef": stack_spec(pspecs),
+        "round": jax.sharding.PartitionSpec(),
+    }
+
+    Bp = spec.global_batch // (P_pods * H)
+    assert Bp >= 1, "global batch too small for H x pods"
+    S = spec.seq_len
+    batches_abs = {
+        "tokens": jax.ShapeDtypeStruct((H, P_pods, Bp, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((H, P_pods, Bp, S), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((H, P_pods, Bp, S), jnp.bfloat16),
+    }
+    bspec = jax.sharding.PartitionSpec(None, "pod", "data")
+    batch_specs = {k: bspec for k in batches_abs}
+
+    in_sh = (named(mesh, state_specs), named(mesh, batch_specs))
+    out_sh = (named(mesh, state_specs),
+              {"delta_norm": jax.sharding.NamedSharding(
+                  mesh, jax.sharding.PartitionSpec())})
+    return Cell(cfg=cfg, spec=spec, mesh=mesh, plan=plan, model=model,
+                opts=opts, fn=round_fn, abstract_args=(state_abs, batches_abs),
+                in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(0,) if opts.donate else ())
+
+
+# ------------------------------------------------------------------------- the cell
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower / run one (arch x shape x mesh) combination."""
+    cfg: ArchConfig
+    spec: ShapeSpec
+    mesh: Mesh
+    plan: MeshPlan
+    model: Model
+    opts: CellOptions
+    fn: Any                       # the step callable
+    abstract_args: tuple          # ShapeDtypeStructs for .lower()
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+    @property
+    def name(self) -> str:
+        return f"{self.cfg.name}/{self.spec.name}"
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               opts: CellOptions = CellOptions(),
+               opt_cfg: AdamWConfig = AdamWConfig()) -> Cell:
+    cfg = configs.get(arch) if isinstance(arch, str) else arch
+    if opts.remat is not None:
+        cfg = dataclasses.replace(cfg, remat=opts.remat)
+    if opts.capacity_factor > 0:
+        cfg = dataclasses.replace(cfg, capacity_factor=opts.capacity_factor)
+    if opts.loss_chunk > 0:
+        cfg = dataclasses.replace(cfg, loss_chunk=opts.loss_chunk)
+    if opts.packed_decode:
+        cfg = dataclasses.replace(cfg, packed_decode=True)
+    spec = SHAPES[shape]
+    skip = cell_is_runnable(cfg, shape)
+    if skip:
+        raise ValueError(f"cell {cfg.name}/{shape} not runnable: {skip}")
+    from repro.parallel.sharding import DP_ONLY_RULES
+    rules = DP_ONLY_RULES if opts.dp_only else None
+    plan = MeshPlan(mesh=mesh, fsdp=opts.fsdp, sp=opts.sp,
+                    bf16_reduce=opts.bf16_reduce,
+                    moe_combine_reshard=opts.moe_combine_reshard, rules=rules)
+    model = Model(cfg, plan)
+    inputs = token_inputs(cfg, spec)
+    in_pspecs = batch_pspecs(plan, cfg, inputs)
+    B, S = spec.global_batch, spec.seq_len
+
+    if opts.titchener and spec.step == "train":
+        return _build_titchener_cell(cfg, spec, mesh, plan, opts, opt_cfg)
+
+    if spec.step == "train":
+        # dp_only shards batch over every mesh axis -> microbatching would
+        # leave devices idle; run the full batch in one shot.
+        M = 1 if opts.dp_only else (opts.num_microbatches
+                                    or _auto_microbatches(cfg, spec))
+        fn = make_train_step(model, opt_cfg, M, zero2_accum=opts.zero2_accum,
+                             accum_dtype=opts.accum_dtype)
+        st_specs = train_state_specs(cfg, plan)
+        abstract = (abstract_train_state(cfg), inputs)
+        in_sh = (named(mesh, st_specs), named(mesh, in_pspecs))
+        out_sh = (named(mesh, st_specs),
+                  tmap(lambda _: NamedSharding(mesh, P()),
+                       {"loss": 0, "tokens": 0, "aux_loss": 0, "grad_norm": 0,
+                        "lr": 0}))
+        donate = (0,) if opts.donate else ()
+    elif spec.step == "prefill":
+        fn = make_prefill_step(model, max_len=S)
+        from repro.models.params import abstract_params, partition_specs
+        abstract = (abstract_params(cfg), inputs)
+        in_sh = (named(mesh, partition_specs(cfg, plan)),
+                 named(mesh, in_pspecs))
+        cache_sh = named(mesh, model.cache_specs(B, S))
+        logits_sh = NamedSharding(
+            mesh, plan.spec(("batch", "vocab"), (B, cfg.vocab_size)))
+        out_sh = (logits_sh, cache_sh)
+        donate = ()
+    else:  # decode
+        fn = make_decode_step(model)
+        from repro.models.params import abstract_params, partition_specs
+        cache = model.abstract_cache(B, S)
+        abstract = (abstract_params(cfg), inputs["tokens"], cache)
+        cache_sh = named(mesh, model.cache_specs(B, S))
+        in_sh = (named(mesh, partition_specs(cfg, plan)),
+                 NamedSharding(mesh, in_pspecs["tokens"]), cache_sh)
+        logits_sh = NamedSharding(
+            mesh, plan.spec(("batch", "vocab"), (B, cfg.vocab_size)))
+        out_sh = (logits_sh, cache_sh)
+        donate = (2,) if opts.donate else ()
+
+    return Cell(cfg=cfg, spec=spec, mesh=mesh, plan=plan, model=model,
+                opts=opts, fn=fn, abstract_args=abstract, in_shardings=in_sh,
+                out_shardings=out_sh, donate_argnums=donate)

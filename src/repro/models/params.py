@@ -1,0 +1,199 @@
+"""Parameter definition trees.
+
+Every parameter is declared once as a ``ParamDef(shape, logical, init_scale)`` leaf in a
+nested dict; the same tree drives
+  * ``init_params``      — materialize arrays (smoke tests, real training),
+  * ``abstract_params``  — ShapeDtypeStructs (multi-pod dry-run, no allocation),
+  * ``partition_specs``  — logical axes -> PartitionSpec via the MeshPlan rules.
+
+Repeated layer stacks carry a leading "layers" dimension and are consumed by
+``jax.lax.scan`` (compact HLO for 64–100 layer models; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import MeshPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _stack(defs: dict, n: int) -> dict:
+    """Prefix every ParamDef with a scanned 'layers' dimension of size n."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical, d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def attn_defs(cfg: ArchConfig, cross: bool = False) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "qk_depth")),
+        "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "qk_depth")),
+        "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "qk_depth")),
+        "wo": ParamDef((H, hd, D), ("heads", "qk_depth", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        d["q_norm"] = ParamDef((hd,), (None,), "ones")
+        d["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return d
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((D, F), ("embed", "ffn")),
+        "w_up": ParamDef((D, F), ("embed", "ffn")),
+        "w_down": ParamDef((F, D), ("ffn", "embed")),
+    }
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    d = {
+        "router": ParamDef((D, E), ("embed_nofsdp", "experts")),
+        "we_gate": ParamDef((E, D, F), ("experts", "embed", "ffn_nofsdp")),
+        "we_up": ParamDef((E, D, F), ("experts", "embed", "ffn_nofsdp")),
+        "we_down": ParamDef((E, F, D), ("experts", "ffn_nofsdp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        d["shared"] = mlp_defs(cfg, cfg.num_shared_experts * cfg.d_ff_expert)
+    return d
+
+
+def ssm_defs(cfg: ArchConfig) -> dict:
+    D, DI, N, Hs, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_conv_width)
+    return {
+        "w_z": ParamDef((D, DI), ("embed", "ffn")),
+        "w_x": ParamDef((D, DI), ("embed", "ffn")),
+        "w_b": ParamDef((D, N), ("embed", None)),
+        "w_c": ParamDef((D, N), ("embed", None)),
+        "w_dt": ParamDef((D, Hs), ("embed", "ssm_heads")),
+        "conv_x": ParamDef((W, DI), ("conv", "ffn")),
+        "conv_b": ParamDef((W, N), ("conv", None)),
+        "conv_c": ParamDef((W, N), ("conv", None)),
+        "a_log": ParamDef((Hs,), ("ssm_heads",), "ssm_a"),
+        "dt_bias": ParamDef((Hs,), ("ssm_heads",), "ssm_dt"),
+        "d_skip": ParamDef((Hs,), ("ssm_heads",), "ones"),
+        "gate_norm": ParamDef((DI,), ("ffn",), "ones"),
+        "out_proj": ParamDef((DI, D), ("ffn", "embed")),
+    }
+
+
+def norm_def(cfg: ArchConfig) -> ParamDef:
+    return ParamDef((cfg.d_model,), (None,), "ones")
+
+
+def _decoder_layer_defs(cfg: ArchConfig) -> dict:
+    """One repeated decoder layer (self-attn or ssm [+ moe]) for the scanned stack."""
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ssm": ssm_defs(cfg), "ln1": norm_def(cfg)}
+    d = {"attn": attn_defs(cfg), "ln1": norm_def(cfg), "ln2": norm_def(cfg)}
+    if cfg.family == "moe":
+        d["moe"] = moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_defs(cfg)
+    return d
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    tree = {
+        "embed": ParamDef((cfg.vocab_size, D), ("vocab", "embed"), "normal", 1.0),
+        "final_norm": norm_def(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = ParamDef((D, cfg.vocab_size), ("embed", "vocab"))
+
+    if cfg.family == "vlm":
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.num_layers - n_cross
+        group = cfg.cross_attn_every - 1
+        assert n_self == n_cross * group, "num_layers must tile into (self*,cross) groups"
+        self_layer = {"attn": attn_defs(cfg), "mlp": mlp_defs(cfg),
+                      "ln1": norm_def(cfg), "ln2": norm_def(cfg)}
+        cross_layer = {"xattn": attn_defs(cfg, cross=True), "mlp": mlp_defs(cfg),
+                       "ln1": norm_def(cfg), "ln2": norm_def(cfg),
+                       "gate": ParamDef((), (), "zeros")}
+        tree["self_layers"] = _stack(_stack(self_layer, group), n_cross)
+        tree["cross_layers"] = _stack(cross_layer, n_cross)
+        return tree
+
+    tree["layers"] = _stack(_decoder_layer_defs(cfg), cfg.num_layers)
+
+    if cfg.family == "hybrid":
+        tree["shared_block"] = {"attn": attn_defs(cfg), "mlp": mlp_defs(cfg),
+                                "ln1": norm_def(cfg), "ln2": norm_def(cfg)}
+    if cfg.family == "encdec":
+        enc_layer = {"attn": attn_defs(cfg), "mlp": mlp_defs(cfg),
+                     "ln1": norm_def(cfg), "ln2": norm_def(cfg)}
+        tree["enc_layers"] = _stack(enc_layer, cfg.encoder_layers)
+        tree["enc_norm"] = norm_def(cfg)
+        # decoder self layers get a cross-attn block
+        dec = tree["layers"]
+        dec["xattn"] = _stack(attn_defs(cfg, cross=True), cfg.num_layers)
+        dec["ln3"] = _stack({"n": norm_def(cfg)}, cfg.num_layers)["n"]
+    return tree
+
+
+# ------------------------------------------------------------------ materialization
+def _init_leaf(d: ParamDef, key, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_a":       # A in [-1, -0.5]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.5, 1.0)
+        return jnp.log(u).astype(jnp.float32)  # a_log kept f32; A = -exp(a_log)
+    if d.init == "ssm_dt":      # softplus^-1 of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(jnp.float32)
+    fan_in = d.shape[0] if len(d.shape) else 1
+    if len(d.shape) >= 2:
+        fan_in = 1
+        for s, log in zip(d.shape[:-1], d.logical[:-1]):
+            if log != "layers":  # scan dims are not fan-in dims
+                fan_in *= s
+    std = d.scale / max(fan_in, 1) ** 0.5
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+    arrs = [_init_leaf(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    def to_struct(d: ParamDef):
+        dt = jnp.float32 if d.init in ("ssm_a", "ssm_dt") else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+    return jax.tree_util.tree_map(to_struct, param_defs(cfg), is_leaf=is_def)
+
+
+def partition_specs(cfg: ArchConfig, plan: MeshPlan) -> dict:
+    return jax.tree_util.tree_map(
+        lambda d: plan.spec(d.logical, d.shape), param_defs(cfg), is_leaf=is_def)

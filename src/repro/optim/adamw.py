@@ -1,0 +1,112 @@
+"""AdamW with f32 master weights and ZeRO-sharded optimizer state.
+
+Params stay in the model dtype (bf16) and are regenerated from the f32 master copy
+every step; m/v/master carry the param's logical axes but are laid out with the
+OPT_RULES sharding (the FSDP dim additionally spread over the "pod" axis), so the
+three f32 trees shard 512-way on the production mesh (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import is_def, param_defs
+from repro.parallel.sharding import MeshPlan
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: dict) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "m": tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": tmap(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(cfg: ArchConfig) -> dict:
+    defs = param_defs(cfg)
+    f32 = tmap(lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs,
+               is_leaf=is_def)
+    return {"m": f32, "v": f32, "master": f32,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_specs(cfg: ArchConfig, plan: MeshPlan) -> dict:
+    """PartitionSpecs for the optimizer state (ZeRO rules, pod-spread)."""
+    defs = param_defs(cfg)
+    spec = tmap(lambda d: plan.opt_spec(d.logical, d.shape), defs, is_leaf=is_def)
+    from jax.sharding import PartitionSpec as P
+    return {"m": spec, "v": spec, "master": spec, "step": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params: dict, grads: dict, state: dict, cfg: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    from repro.optim.schedules import warmup_cosine
+
+    step = state["step"] + 1
+    if lr is None:
+        lr = warmup_cosine(step, peak_lr=cfg.peak_lr,
+                           warmup_steps=cfg.warmup_steps,
+                           total_steps=cfg.total_steps)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = p_master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                      + cfg.weight_decay * p_master)
+        return new_master, m, v
+
+    flat_m, treedef = jax.tree_util.tree_flatten(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_master = jax.tree_util.tree_leaves(state["master"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_p = jax.tree_util.tree_leaves(params)
+
+    new_master, new_m, new_v, new_p = [], [], [], []
+    for p, g, m, v, mast in zip(flat_p, flat_g, flat_m, flat_v, flat_master):
+        nm_master, nm, nv = upd(mast, g, m, v)
+        new_master.append(nm_master)
+        new_m.append(nm)
+        new_v.append(nv)
+        new_p.append(nm_master.astype(p.dtype))
+
+    unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    new_state = {"m": unflat(new_m), "v": unflat(new_v),
+                 "master": unflat(new_master), "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return unflat(new_p), new_state, metrics

@@ -1,0 +1,57 @@
+"""Gradient/delta compression for the thin cross-pod (DCN) boundary.
+
+int8 symmetric quantization with per-tensor scales and error feedback (EF): the
+quantization residual is carried to the next sync so the compressed local-SGD
+trainer stays unbiased over time. This is the quantitative realization of the
+paper's "occasional, small cross-boundary traffic" claim — 4x fewer bytes than f32
+(16x vs f32 grads when combined with H-step local sync amortization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q int8, scale f32 scalar)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree: dict, ef: dict):
+    """Quantize every leaf with error feedback. Returns ((q, scales), new_ef)."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    ef_flat = jax.tree_util.tree_leaves(ef)
+    qs, scales, new_ef = [], [], []
+    for x, e in zip(flat, ef_flat):
+        v = x.astype(jnp.float32) + e
+        q, s = quantize_int8(v)
+        qs.append(q)
+        scales.append(s)
+        new_ef.append(v - dequantize_int8(q, s))
+    unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return (unflat(qs), unflat(scales)), unflat(new_ef)
+
+
+def decompress_tree(qs: dict, scales: dict) -> dict:
+    return tmap(dequantize_int8, qs, scales)
+
+
+def init_error_feedback(params: dict) -> dict:
+    return tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(tree: dict) -> int:
+    """Bytes on the wire for the int8-compressed tree (payload + scales)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(l.size for l in leaves) + 4 * len(leaves)

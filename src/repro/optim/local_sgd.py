@@ -1,0 +1,178 @@
+"""Titchener local-sync trainer (DiLoCo-style local SGD over the pod boundary).
+
+The paper's core systems insight — *most traffic stays local; only small, occasional
+control traffic crosses the cloud boundary* — becomes a distributed-optimization
+mode: each pod runs H AdamW steps on its own parameter copy with gradient reduction
+confined to in-pod axes, then pods exchange int8-compressed (error-feedback)
+parameter deltas once per round. An outer Nesterov-SGD step applies the pod-mean
+delta. Cross-pod (DCN) bytes drop by 4x (int8) x H (amortization) vs per-step
+synchronous data parallelism.
+
+Mechanics: every per-pod tree carries a leading ``n_pods`` dim sharded on the "pod"
+mesh axis; the model loss is ``jax.vmap(..., spmd_axis_name="pod")``-mapped over it,
+which keeps gradients pod-local (no cross-pod reduction is ever emitted inside the
+inner loop). The only pod-axis collective in the round is the delta mean.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.compression import compress_tree, dequantize_int8
+
+tmap = jax.tree_util.tree_map
+
+
+def pod_free_plan(plan):
+    """A MeshPlan whose rules never touch the "pod" axis — required for the model
+    called under ``vmap(..., spmd_axis_name="pod")`` (the vmapped dim owns pod)."""
+    from repro.parallel.sharding import DEFAULT_RULES, MeshPlan
+    base = dict(plan.rules or DEFAULT_RULES)
+    rules = {k: tuple(a for a in v if a != "pod") for k, v in base.items()}
+    return MeshPlan(mesh=plan.mesh, fsdp=plan.fsdp, sp=plan.sp, rules=rules)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSGDConfig:
+    inner_steps: int = 4          # H: pod-local steps per sync round
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    nesterov: bool = True
+    compress: bool = True         # int8 + error feedback on the pod-axis exchange
+
+
+def init_local_sgd_state(params: dict, n_pods: int) -> dict:
+    """params: unstacked bf16 tree. Builds pod-stacked working copies."""
+    stack = lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape)
+    pod_params = tmap(stack, params)
+    pod_opt = {
+        "m": tmap(lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params),
+        "v": tmap(lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params),
+        "master": tmap(lambda p: stack(p).astype(jnp.float32), params),
+        "step": jnp.zeros((n_pods,), jnp.int32),
+    }
+    return {
+        "pod_params": pod_params,
+        "pod_opt": pod_opt,
+        "master": tmap(lambda p: p.astype(jnp.float32), params),
+        "momentum": tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "ef": tmap(lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params),
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+def _compress_stacked(delta: dict, ef: dict):
+    """Per-pod int8+EF compression of pod-stacked trees (leaves [P, ...])."""
+    def one_pod(d, e):
+        (q, s), ne = compress_tree(d, e)
+        return q, s, ne
+
+    return jax.vmap(one_pod)(delta, ef)
+
+
+def make_round_fn(loss_fn, inner_cfg: AdamWConfig, cfg: LocalSGDConfig,
+                  spmd_axis: str = "pod", mesh=None):
+    """Build the jitted one-round function.
+
+    loss_fn(params, batch) -> (loss, metrics) for ONE pod's (unstacked) params and
+    batch; it must carry only pod-free sharding constraints (the caller passes a
+    MeshPlan whose "batch" rule excludes the pod axis). ``spmd_axis=None`` runs the
+    pod dimension as a plain vmap (CPU tests / meshes without a pod axis).
+
+    round_fn(state, batches) with batch leaves [H, n_pods, ...] -> (state, metrics).
+    """
+    grad_one = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    pod_vmap = lambda f: jax.vmap(f, spmd_axis_name=spmd_axis)
+
+    def inner_step(carry, batch_h):
+        pod_params, pod_opt = carry
+        grads = pod_vmap(grad_one)(pod_params, batch_h)
+
+        def upd(p, g, m, v, master, step):
+            st = {"m": m, "v": v, "master": master, "step": step}
+            np_, ns, _ = adamw_update(p, g, st, inner_cfg)
+            return np_, ns["m"], ns["v"], ns["master"], ns["step"]
+
+        new_p, m, v, master, step = pod_vmap(upd)(
+            pod_params, grads, pod_opt["m"], pod_opt["v"], pod_opt["master"],
+            pod_opt["step"])
+        return (new_p, {"m": m, "v": v, "master": master, "step": step}), None
+
+    def round_fn(state: dict, batches: dict):
+        (pod_params, pod_opt), _ = jax.lax.scan(
+            inner_step, (state["pod_params"], state["pod_opt"]), batches,
+            length=cfg.inner_steps)
+
+        # pod delta (pseudo-gradient): start-of-round master minus local result
+        delta = tmap(lambda g, loc: g[None] - loc, state["master"],
+                     pod_opt["master"])                        # [P, ...]
+
+        if cfg.compress:
+            q, s, new_ef = _compress_stacked(delta, state["ef"])
+            if mesh is not None and "pod" in getattr(mesh, "shape", {}):
+                # Put int8 on the DCN wire: all-gather the quantized deltas
+                # pod-replicated and dequantize+mean LOCALLY. Without this,
+                # XLA dequantizes before the pod-mean all-reduce and the wire
+                # carries f32 (measured: compressed == uncompressed DCN bytes;
+                # EXPERIMENTS.md §Perf cell 2 iteration 3).
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                def rep(t):
+                    spec = P(None, *([P.UNCONSTRAINED] * (t.ndim - 1)))
+                    return jax.lax.with_sharding_constraint(
+                        t, NamedSharding(mesh, spec))
+
+                q = tmap(rep, q)
+                s = tmap(rep, s)
+            mean_delta = tmap(
+                lambda qq, ss: jnp.mean(
+                    qq.astype(jnp.float32)
+                    * ss.reshape((-1,) + (1,) * (qq.ndim - 1)), axis=0),
+                q, s)
+        else:
+            new_ef = state["ef"]
+            mean_delta = tmap(lambda d: jnp.mean(d, axis=0), delta)
+
+        # outer Nesterov SGD on the pseudo-gradient
+        mu, lr = cfg.outer_momentum, cfg.outer_lr
+        momentum = tmap(lambda mo, d: mu * mo + d, state["momentum"], mean_delta)
+        if cfg.nesterov:
+            update = tmap(lambda mo, d: mu * mo + d, momentum, mean_delta)
+        else:
+            update = momentum
+        master = tmap(lambda gm, u: gm - lr * u, state["master"], update)
+
+        # re-broadcast the synced master into every pod's working copies
+        n_pods = jax.tree_util.tree_leaves(pod_params)[0].shape[0]
+        stack = lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape)
+        new_pod_params = tmap(lambda gm, wp: stack(gm.astype(wp.dtype)),
+                              master, pod_params)
+        new_pod_master = tmap(stack, master)
+        pod_opt = dict(pod_opt, master=new_pod_master)
+
+        new_state = {
+            "pod_params": new_pod_params, "pod_opt": pod_opt, "master": master,
+            "momentum": momentum, "ef": new_ef, "round": state["round"] + 1,
+        }
+        delta_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(d)) for d in jax.tree_util.tree_leaves(mean_delta)))
+        return new_state, {"delta_norm": delta_norm}
+
+    return round_fn
+
+
+def dcn_bytes_per_round(params: dict, cfg: LocalSGDConfig) -> Tuple[int, int]:
+    """(local_sgd_bytes, sync_dp_bytes_over_H_steps) crossing the pod boundary.
+
+    Sync-DP all-reduces bf16 gradients every step (ring: ~2x payload); local SGD
+    exchanges one int8 delta (+f32 scale/leaf) per H steps.
+    """
+    n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    payload = n_params + 4 * n_leaves if cfg.compress else 4 * n_params
+    sync_dp = cfg.inner_steps * 2 * n_params * 2   # H steps x ring 2x x bf16
+    return 2 * payload, sync_dp

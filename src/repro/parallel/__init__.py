@@ -1,0 +1,1 @@
+from repro.parallel.sharding import MeshPlan, logical_spec, constrain  # noqa: F401

@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules over the (pod, data, model) production mesh.
+
+Every tensor dimension in the framework carries a *logical* axis name; ``MeshPlan``
+maps logical names to mesh axes and degrades gracefully (drops mesh axes) whenever a
+dimension is not divisible — so the same model code lowers on the 512-chip production
+mesh, the 256-chip single-pod mesh, and a 2-device CPU test mesh.
+
+Cross-pod traffic discipline (the paper's thin-boundary insight): only the "pod" axis
+crosses DCN. Rules keep every *per-layer* collective (TP/SP/EP/FSDP) on in-pod axes;
+the pod axis carries batch parallelism only, so the per-step DCN traffic is exactly one
+gradient reduction — which the Titchener local-sync trainer further amortizes/compresses
+(see repro/optim/local_sgd.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in order; trailing axes dropped if not divisible)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # activations: sequence stays unsharded unless SP
+    "seq_sp": ("model",),      # residual-stream sequence parallelism
+    "cache_seq": ("model",),   # decode KV/state cache: shard time dim on model axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "ffn_nofsdp": (),
+    "ssm_heads": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": ("data",),        # FSDP: weight-embed dim over the in-pod data axis
+    "embed_nofsdp": (),
+    "layers": (),              # scan dimension
+    "state": (),
+    "conv": (),
+    "qk_depth": (),
+    "capacity": (),
+    None: (),
+}
+
+
+# optimizer-state override: ZeRO — spread the FSDP dim over the pod axis as well,
+# so AdamW moments + f32 master shard 512-way (grads are pod-reduced anyway).
+OPT_RULES = dict(DEFAULT_RULES, embed=("pod", "data"))
+
+# pure data-parallel + ZeRO rules for small models where TP matmuls fall below
+# MXU efficiency (hillclimb lever; see EXPERIMENTS.md §Perf cell 3): batch over
+# EVERY axis, weights ZeRO-sharded over (data, model), no tensor parallelism.
+DP_ONLY_RULES = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data", "model"),
+    heads=(), kv_heads=(), ffn=(), ssm_heads=(),
+    vocab=(),
+    embed=("data", "model"),
+    cache_seq=(),
+)
+
+
+def opt_rules_for(base: dict) -> dict:
+    """ZeRO optimizer rules derived from any base rule set: spread the weight
+    embed dim over the pod axis in addition to the base axes."""
+    embed = tuple(dict.fromkeys(("pod",) + tuple(base.get("embed", ()))))
+    return dict(base, embed=embed)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A mesh plus the policy switches that pick sharding rules."""
+    mesh: Mesh
+    fsdp: bool = True          # shard weight embed dims over "data" (ZeRO-3 style)
+    sp: bool = False           # sequence-parallel residual stream (hillclimb switch)
+    bf16_reduce: bool = False  # bf16 partial-sum dots -> bf16 TP all-reduces
+    moe_combine_reshard: bool = False  # a2a slot buffers before combine gather
+    rules: Optional[dict] = None
+
+    @property
+    def reduce_dtype(self):
+        """preferred_element_type for dots whose partial sums cross TP shards.
+        bf16 halves every TP all-reduce + the activation traffic around it; the
+        MXU still accumulates f32 within a tile (TPU), so only the cross-shard
+        reduction is low-precision (MaxText default practice)."""
+        import jax.numpy as jnp
+        return jnp.bfloat16 if self.bf16_reduce else None
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+    def _mesh_axes_for(self, logical: Optional[str],
+                       rules: Optional[dict] = None,
+                       is_opt: bool = False) -> Tuple[str, ...]:
+        rules = rules if rules is not None else (self.rules or DEFAULT_RULES)
+        if logical == "embed" and not self.fsdp and not is_opt:
+            logical = "embed_nofsdp"
+        if logical == "seq" and self.sp:
+            logical = "seq_sp"
+        axes = rules.get(logical, ())
+        return tuple(a for a in axes if a in self.mesh.shape)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             rules: Optional[dict] = None, is_opt: bool = False) -> P:
+        """PartitionSpec for a tensor; drops mesh axes a dim can't divide and never
+        reuses a mesh axis across dims (PartitionSpec invariant)."""
+        entries = []
+        used = set()
+        for d, logical in enumerate(logical_axes):
+            axes = tuple(a for a in self._mesh_axes_for(logical, rules, is_opt)
+                         if a not in used)
+            if shape is not None and axes:
+                kept = []
+                prod = 1
+                for a in axes:
+                    n = self.axis_size(a)
+                    if shape[d] % (prod * n) == 0:
+                        kept.append(a)
+                        prod *= n
+                    else:
+                        break
+                axes = tuple(kept)
+            used.update(axes)
+            entries.append(axes if len(axes) != 1 else axes[0])
+        cleaned = [e if e != () else None for e in entries]
+        while cleaned and cleaned[-1] is None:
+            cleaned.pop()
+        return P(*cleaned)
+
+    def opt_spec(self, logical_axes, shape=None) -> P:
+        """PartitionSpec for optimizer state (ZeRO over the pod axis)."""
+        base = self.rules or DEFAULT_RULES
+        return self.spec(logical_axes, shape, rules=opt_rules_for(base),
+                         is_opt=True)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def logical_spec(plan: MeshPlan, logical_axes, shape=None) -> P:
+    return plan.spec(logical_axes, shape)
+
+
+def constrain(x: jax.Array, plan: MeshPlan, logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes (shape-aware divisibility fallback)."""
+    spec = plan.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return int(math.ceil(n / m) * m)

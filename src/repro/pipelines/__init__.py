@@ -1,0 +1,8 @@
+"""Hybrid workflow orchestration (paper §5: Cloud Composer / Apache Airflow).
+
+Scheduler + broker + task DB live on the master partition; workers live on any
+partition and reach them exclusively through the hybrid platform's gateway
+routes — the exact pod-service dependency graph of Figure 3.
+"""
+from repro.pipelines.dag import DAG, Task
+from repro.pipelines.composer import HybridComposer

@@ -1,0 +1,52 @@
+"""Message broker (the redis of paper §5) — named FIFO queues with lease-style
+redelivery: a pulled message is invisible until acked or its lease expires
+(worker died mid-task -> the task instance is redelivered, not lost).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Deque, Dict, Tuple
+
+
+class Broker:
+    def __init__(self, clock_fn=None, lease: float = 30.0):
+        self.queues: Dict[str, Deque[dict]] = {}
+        self.inflight: Dict[int, Tuple[str, dict, float]] = {}
+        self._tag = itertools.count(1)
+        self.clock_fn = clock_fn or (lambda: 0.0)
+        self.lease = lease
+
+    def _expire(self) -> None:
+        now = self.clock_fn()
+        for tag, (q, msg, t) in list(self.inflight.items()):
+            if now - t > self.lease:
+                del self.inflight[tag]
+                self.queues.setdefault(q, deque()).appendleft(msg)
+
+    def handle(self, msg: dict) -> dict:
+        op = msg.get("op")
+        self._expire()
+        if op == "push":
+            self.queues.setdefault(msg["queue"], deque()).append(msg["msg"])
+            return {"ok": True, "depth": len(self.queues[msg["queue"]])}
+        if op == "pull":
+            q = self.queues.get(msg["queue"])
+            if not q:
+                return {"ok": True, "msg": None}
+            item = q.popleft()
+            tag = next(self._tag)
+            self.inflight[tag] = (msg["queue"], item, self.clock_fn())
+            return {"ok": True, "msg": item, "tag": tag}
+        if op == "ack":
+            self.inflight.pop(msg.get("tag"), None)
+            return {"ok": True}
+        if op == "nack":
+            rec = self.inflight.pop(msg.get("tag"), None)
+            if rec:
+                self.queues.setdefault(rec[0], deque()).appendleft(rec[1])
+            return {"ok": True}
+        if op == "depth":
+            return {"ok": True,
+                    "depth": len(self.queues.get(msg["queue"], ()))}
+        return {"ok": False, "error": f"unknown op {op}"}

@@ -1,0 +1,93 @@
+"""HybridComposer — the paper's §5 use case, end to end.
+
+Embeds the Airflow components as pods/services of an AppSpec over the hybrid
+platform: scheduler + broker + taskdb on the master (public) partition, workers
+on any partitions (private clusters included). ``upload()`` runs the
+configuration phase (CRD broadcast -> Algorithm 5 in every agent); afterwards
+workers on private partitions consume the master-hosted broker/DB purely
+through gateway routes — Figure 3 of the paper, reproduced as a test (see
+tests/test_pipelines.py, which also asserts the ACLs block any pod NOT in the
+dependency graph).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.plane import ManagementPlane
+from repro.core.service_graph import AppSpec, Pod, Service
+from repro.pipelines.broker import Broker
+from repro.pipelines.dag import DAG
+from repro.pipelines.scheduler import Scheduler
+from repro.pipelines.services import ServiceClient, ServiceEndpoint
+from repro.pipelines.taskdb import TaskDB
+from repro.pipelines.worker import PipelineWorker
+
+BROKER_PORT = 6379      # the paper's redis
+TASKDB_PORT = 5432      # the paper's SQL database
+
+
+def composer_appspec(master: str,
+                     workers: Dict[str, Sequence[str]]) -> AppSpec:
+    """workers: cluster -> worker pod names hosted there."""
+    pods = [Pod("scheduler-pod", needs=("broker", "taskdb")),
+            Pod("broker-pod", needs=()),
+            Pod("taskdb-pod", needs=())]
+    partition = {"scheduler-pod": master, "broker-pod": master,
+                 "taskdb-pod": master}
+    for cluster, names in workers.items():
+        for w in names:
+            pods.append(Pod(w, needs=("broker", "taskdb")))
+            partition[w] = cluster
+    services = (Service("broker", BROKER_PORT, ("broker-pod",)),
+                Service("taskdb", TASKDB_PORT, ("taskdb-pod",)))
+    return AppSpec(services=services, pods=tuple(pods), partition=partition)
+
+
+class HybridComposer:
+    def __init__(self, plane: ManagementPlane,
+                 workers: Dict[str, Sequence[str]],
+                 worker_queues: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.plane = plane
+        self.spec = composer_appspec(plane.master, workers)
+        plane.upload_spec(self.spec)
+
+        fabric = plane.fabric
+        master_state = plane.master_agent.state
+        self.broker = Broker(clock_fn=lambda: fabric.clock)
+        self.taskdb = TaskDB()
+        ServiceEndpoint(fabric, self.spec, master_state, "broker",
+                        self.broker.handle)
+        ServiceEndpoint(fabric, self.spec, master_state, "taskdb",
+                        self.taskdb.handle)
+
+        sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
+        self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock)
+
+        self.workers: List[PipelineWorker] = []
+        for cluster, names in workers.items():
+            state = plane.agents[cluster].state
+            for w in names:
+                client = ServiceClient(fabric, state, w)
+                queues = (worker_queues or {}).get(w, ("default",))
+                self.workers.append(PipelineWorker(
+                    client, w, queues=queues, clock_fn=lambda: fabric.clock))
+
+    # ------------------------------------------------------------------- user API
+    def add_dag(self, dag: DAG) -> None:
+        self.scheduler.add_dag(dag)
+
+    def tick(self) -> None:
+        self.scheduler.tick()
+        for w in self.workers:
+            w.tick()
+        self.plane.tick()
+
+    def run_dag(self, dag_id: str, max_ticks: int = 500) -> bool:
+        for _ in range(max_ticks):
+            self.tick()
+            if self.scheduler.dag_done(dag_id):
+                return self.scheduler.dag_success(dag_id)
+        return False
+
+    def status(self, dag_id: str) -> Dict[str, str]:
+        return self.scheduler.dag_status(dag_id)

@@ -1,0 +1,79 @@
+"""Workflow DAGs of data-processing tasks (the Airflow model, paper §5).
+
+A ``Task`` is a named unit with upstream dependencies, a kind (etl / train /
+eval / export / custom python), a payload, and optional placement constraints
+(``requires`` capability tags — the paper's compliance routing). A ``DAG``
+validates acyclicity and yields ready sets; scheduling/execution live in
+scheduler.py / worker.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    kind: str = "python"                 # etl | train | eval | export | python
+    upstream: Tuple[str, ...] = ()
+    payload: dict = dataclasses.field(default_factory=dict)
+    requires: Tuple[str, ...] = ()       # capability tags (compliance routing)
+    retries: int = 1
+    fn: Optional[Callable[[dict], dict]] = None   # python tasks (tests/examples)
+
+
+class DAG:
+    def __init__(self, dag_id: str, tasks: Sequence[Task]):
+        self.dag_id = dag_id
+        self.tasks: Dict[str, Task] = {}
+        for t in tasks:
+            if t.name in self.tasks:
+                raise ValueError(f"duplicate task {t.name}")
+            self.tasks[t.name] = t
+        self._validate()
+
+    def _validate(self) -> None:
+        for t in self.tasks.values():
+            for u in t.upstream:
+                if u not in self.tasks:
+                    raise ValueError(f"{t.name} depends on unknown task {u}")
+        order = self.topological_order()
+        if len(order) != len(self.tasks):
+            raise ValueError(f"cycle in DAG {self.dag_id}")
+
+    def topological_order(self) -> List[str]:
+        indeg = {n: len(t.upstream) for n, t in self.tasks.items()}
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        out: List[str] = []
+        while ready:
+            n = ready.pop(0)
+            out.append(n)
+            for m, t in self.tasks.items():
+                if n in t.upstream:
+                    indeg[m] -= 1
+                    if indeg[m] == 0:
+                        ready.append(m)
+            ready.sort()
+        return out
+
+    def ready_tasks(self, done: set, running: set, failed: set) -> List[Task]:
+        """Tasks whose upstreams are all done and which are not yet scheduled."""
+        out = []
+        for n, t in self.tasks.items():
+            if n in done or n in running or n in failed:
+                continue
+            if all(u in done for u in t.upstream):
+                out.append(t)
+        return sorted(out, key=lambda t: t.name)
+
+    def downstream_of(self, name: str) -> set:
+        out, frontier = set(), {name}
+        while frontier:
+            nxt = set()
+            for m, t in self.tasks.items():
+                if m not in out and frontier & set(t.upstream):
+                    out.add(m)
+                    nxt.add(m)
+            frontier = nxt
+        return out

@@ -1,0 +1,93 @@
+"""DAG scheduler (the Airflow scheduler, paper §5).
+
+Runs as a pod on the master partition: every tick it reads task states from the
+taskdb, computes the ready frontier of each registered DAG, and places ready
+task instances onto the broker — one queue per ``requires`` capability set, so
+compliance-constrained tasks (e.g. "onprem-only ETL") are only visible to
+workers inside the right partition. Failed tasks are retried up to
+``Task.retries`` times; tasks downstream of a permanently failed task are
+marked upstream_failed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.pipelines.dag import DAG, Task
+from repro.pipelines.services import ServiceClient
+
+TERMINAL = ("success", "failed", "upstream_failed")
+
+
+def queue_for(task: Task) -> str:
+    return ",".join(sorted(task.requires)) or "default"
+
+
+class Scheduler:
+    def __init__(self, client: ServiceClient, clock_fn=None):
+        self.client = client
+        self.dags: Dict[str, DAG] = {}
+        self.clock_fn = clock_fn or (lambda: 0.0)
+
+    def add_dag(self, dag: DAG) -> None:
+        self.dags[dag.dag_id] = dag
+
+    # -------------------------------------------------------------------- one tick
+    def tick(self) -> List[str]:
+        scheduled = []
+        for dag in self.dags.values():
+            state = self.client.call("taskdb", {"op": "dag_state",
+                                                "dag": dag.dag_id})["tasks"]
+            done = {t for t, r in state.items() if r.get("status") == "success"}
+            running = {t for t, r in state.items()
+                       if r.get("status") in ("queued", "running")}
+            failed = set()
+            for t, r in state.items():
+                if r.get("status") == "failed":
+                    task = dag.tasks[t]
+                    if r["try"] < task.retries + 1:
+                        self._enqueue(dag, task, r["try"] + 1)
+                        running.add(t)
+                        scheduled.append(f"{dag.dag_id}.{t}#retry{r['try']+1}")
+                    else:
+                        failed.add(t)
+                elif r.get("status") == "upstream_failed":
+                    failed.add(t)
+            # propagate permanent failure downstream
+            for t in sorted(failed):
+                for d in dag.downstream_of(t):
+                    if d not in done and d not in failed:
+                        self.client.call("taskdb", {
+                            "op": "upsert", "dag": dag.dag_id, "task": d,
+                            "try": 1, "status": "upstream_failed",
+                            "clock": self.clock_fn()})
+                        failed.add(d)
+            for task in dag.ready_tasks(done, running, failed):
+                self._enqueue(dag, task, 1)
+                scheduled.append(f"{dag.dag_id}.{task.name}")
+        return scheduled
+
+    def _enqueue(self, dag: DAG, task: Task, try_n: int) -> None:
+        self.client.call("taskdb", {"op": "upsert", "dag": dag.dag_id,
+                                    "task": task.name, "try": try_n,
+                                    "status": "queued",
+                                    "clock": self.clock_fn()})
+        self.client.call("broker", {"op": "push", "queue": queue_for(task),
+                                    "msg": {"dag": dag.dag_id,
+                                            "task": task.name,
+                                            "kind": task.kind,
+                                            "payload": task.payload,
+                                            "try": try_n}})
+
+    # ------------------------------------------------------------------ observation
+    def dag_status(self, dag_id: str) -> Dict[str, str]:
+        state = self.client.call("taskdb", {"op": "dag_state",
+                                            "dag": dag_id})["tasks"]
+        dag = self.dags[dag_id]
+        return {t: state.get(t, {}).get("status", "pending")
+                for t in dag.tasks}
+
+    def dag_done(self, dag_id: str) -> bool:
+        return all(s in TERMINAL for s in self.dag_status(dag_id).values())
+
+    def dag_success(self, dag_id: str) -> bool:
+        return all(s == "success" for s in self.dag_status(dag_id).values())

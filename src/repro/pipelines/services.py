@@ -1,0 +1,42 @@
+"""Service plumbing for pipeline components over the hybrid platform.
+
+``ServiceEndpoint`` registers a handler at the service's real address on its
+host cluster (where Algorithm 2 forwards ingress traffic); ``ServiceClient``
+is how a *pod* (worker/scheduler) dials a service BY NAME: it resolves the
+local DNS entry (Algorithm 1) and sends on the fabric — the route tables,
+channels and ACLs (Algorithms 2-4) do the rest. Pods never know where a
+service actually lives; that is the paper's seamless-partitioning claim.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import gateways as GW
+from repro.core.service_graph import AppSpec
+from repro.core.transport import DeliveryError, Fabric
+
+
+class ServiceEndpoint:
+    def __init__(self, fabric: Fabric, spec: AppSpec, state: GW.GatewayState,
+                 name: str, handler: Callable[[dict], dict]):
+        svc = spec.service(name)
+        if spec.host_cluster(name) != state.cluster:
+            raise ValueError(f"{name} is not hosted on {state.cluster}")
+        rank = GW.service_rank(spec, name)
+        self.addr = (state.service_ip(rank), svc.port)
+        fabric.register_handler(state.cluster, self.addr, handler)
+
+
+class ServiceClient:
+    def __init__(self, fabric: Fabric, state: GW.GatewayState, pod: str):
+        self.fabric = fabric
+        self.state = state
+        self.pod = pod
+
+    def call(self, service: str, msg: dict) -> dict:
+        if service not in self.state.dns:
+            raise DeliveryError(f"no DNS entry for {service} in "
+                                f"{self.state.cluster}")
+        addr = self.state.dns[service]
+        return self.fabric.send(self.state.cluster, self.pod,
+                                self.state.cluster, addr, msg)

@@ -1,0 +1,48 @@
+"""Task-instance database (the Airflow metadata SQL DB, paper §5).
+
+Hosted on the master partition; workers commit every finished task here (the
+paper: "commit each finished task to an SQL database"). Rows are keyed
+(dag_id, task, try_number) with status transitions
+queued -> running -> success | failed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+
+class TaskDB:
+    """In-memory table behind a service handler (swap for CloudSQL in prod)."""
+
+    def __init__(self):
+        self.rows: Dict[tuple, dict] = {}
+
+    # ---------------------------------------------------------------- service API
+    def handle(self, msg: dict) -> dict:
+        op = msg.get("op")
+        if op == "upsert":
+            key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
+            row = self.rows.setdefault(key, {"dag": msg["dag"],
+                                             "task": msg["task"],
+                                             "try": key[2]})
+            for k in ("status", "worker", "result", "clock", "error"):
+                if k in msg:
+                    row[k] = msg[k]
+            return {"ok": True}
+        if op == "get":
+            key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
+            return {"ok": True, "row": self.rows.get(key)}
+        if op == "latest":
+            rows = [r for (d, t, _), r in self.rows.items()
+                    if d == msg["dag"] and t == msg["task"]]
+            rows.sort(key=lambda r: r["try"])
+            return {"ok": True, "row": rows[-1] if rows else None}
+        if op == "dag_state":
+            out = {}
+            for (d, t, n), r in self.rows.items():
+                if d != msg["dag"]:
+                    continue
+                cur = out.get(t)
+                if cur is None or n > cur["try"]:
+                    out[t] = r
+            return {"ok": True, "tasks": out}
+        return {"ok": False, "error": f"unknown op {op}"}

@@ -1,0 +1,128 @@
+"""Pipeline worker (the privately-hosted Airflow worker of paper §5/Figure 3).
+
+A worker is an application POD: it lives on some partition, pulls task
+instances from the broker, executes them, and commits results to the taskdb —
+both services resolved by name through the hybrid platform (the worker has no
+idea they live on the master cluster; cross-cloud traffic flows gateway ->
+channel -> gateway exactly as in Figure 2 of the paper).
+
+Built-in task kinds exercise the real JAX substrate:
+  etl    — deterministic shard statistics over the synthetic pipeline
+  train  — a reduced-config Trainer run (payload: arch/steps/...)
+  eval   — forward loss of a fresh reduced model on held-out batches
+  export — parameter manifest (count + tree paths)
+Custom kinds register via ``register(kind, fn)``.
+"""
+from __future__ import annotations
+
+import traceback
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.pipelines.services import ServiceClient
+
+
+def _etl(payload: dict) -> dict:
+    import jax.numpy as jnp
+    from repro.data.pipeline import SyntheticTokens
+    data = SyntheticTokens(vocab_size=payload.get("vocab", 512),
+                           seq_len=payload.get("seq_len", 32),
+                           global_batch=payload.get("batch", 4),
+                           seed=payload.get("seed", 0))
+    n = payload.get("batches", 2)
+    toks = 0
+    for i in range(n):
+        b = data.batch_at(i)
+        toks += int(b["tokens"].size)
+    return {"batches": n, "tokens": toks}
+
+
+def _train(payload: dict) -> dict:
+    from repro.runtime.train_loop import Trainer, TrainJobConfig
+    cfg = TrainJobConfig.from_job({"payload": dict(payload)})
+    tr = Trainer(cfg)
+    m = tr.run()
+    out = {"steps": tr.step, "loss": m.get("loss")}
+    if cfg.checkpoint_dir:
+        out["checkpoint"] = tr.save_checkpoint()
+    return out
+
+
+def _eval(payload: dict) -> dict:
+    from repro.runtime.train_loop import Trainer, TrainJobConfig
+    cfg = TrainJobConfig.from_job({"payload": dict(payload)})
+    tr = Trainer(cfg)
+    if payload.get("restore_from"):
+        tr.restore(payload["restore_from"])
+    batch = tr._sync_batch(10_000)
+    loss, _ = tr.model.loss_fn(tr.params_for_eval()
+                               if cfg.mode == "local_sgd"
+                               else tr.state["params"], batch)
+    return {"eval_loss": float(loss)}
+
+
+def _export(payload: dict) -> dict:
+    import jax
+    from repro.configs import base as configs
+    from repro.models.params import param_defs, is_def
+    cfg = configs.get(payload.get("arch", "qwen3-0.6b"))
+    if payload.get("reduced", True):
+        cfg = cfg.reduced()
+    defs = jax.tree_util.tree_leaves(param_defs(cfg), is_leaf=is_def)
+    n = sum(int(__import__("numpy").prod(d.shape)) for d in defs)
+    return {"exported_params": n, "leaves": len(defs)}
+
+
+DEFAULT_HANDLERS: Dict[str, Callable[[dict], dict]] = {
+    "etl": _etl, "train": _train, "eval": _eval, "export": _export,
+    "python": lambda p: {"echo": p},
+}
+
+
+class PipelineWorker:
+    def __init__(self, client: ServiceClient, pod: str,
+                 queues: Tuple[str, ...] = ("default",), clock_fn=None):
+        self.client = client
+        self.pod = pod
+        self.queues = tuple(queues)
+        self.handlers = dict(DEFAULT_HANDLERS)
+        self.clock_fn = clock_fn or (lambda: 0.0)
+        self.executed = 0
+
+    def register(self, kind: str, fn: Callable[[dict], dict]) -> None:
+        self.handlers[kind] = fn
+
+    # --------------------------------------------------------------------- one tick
+    def tick(self) -> Optional[str]:
+        """Pull at most one task, execute it, commit the result."""
+        for queue in self.queues:
+            resp = self.client.call("broker", {"op": "pull", "queue": queue})
+            msg = resp.get("msg")
+            if msg is None:
+                continue
+            self._execute(msg, resp.get("tag"))
+            return f"{msg['dag']}.{msg['task']}"
+        return None
+
+    def _execute(self, msg: dict, tag) -> None:
+        key = {"dag": msg["dag"], "task": msg["task"], "try": msg["try"]}
+        self.client.call("taskdb", {"op": "upsert", **key, "status": "running",
+                                    "worker": self.pod,
+                                    "clock": self.clock_fn()})
+        fn = self.handlers.get(msg["kind"])
+        try:
+            if fn is None:
+                raise KeyError(f"no handler for kind {msg['kind']!r}")
+            result = fn(dict(msg.get("payload") or {}))
+            self.client.call("taskdb", {"op": "upsert", **key,
+                                        "status": "success", "result": result,
+                                        "worker": self.pod,
+                                        "clock": self.clock_fn()})
+        except Exception as e:                               # noqa: BLE001
+            self.client.call("taskdb", {
+                "op": "upsert", **key, "status": "failed",
+                "error": f"{type(e).__name__}: {e}",
+                "worker": self.pod, "clock": self.clock_fn()})
+            traceback.print_exc()
+        finally:
+            self.executed += 1
+            self.client.call("broker", {"op": "ack", "tag": tag})

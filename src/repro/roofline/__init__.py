@@ -1,0 +1,1 @@
+"""Roofline analysis: post-optimization HLO accounting + three-term roofline."""

@@ -1,0 +1,516 @@
+"""Post-optimization HLO accounting (the dry-run "profiler").
+
+``xla`` device-less cost analysis visits each ``while`` body ONCE, so scanned layer
+stacks under-count FLOPs/bytes by a factor of the trip count (verified empirically —
+see EXPERIMENTS.md §Roofline methodology). This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with proper loop multiplication:
+
+  * flops             — dot products (2 * result_elems * contraction), x trip counts.
+  * hbm_bytes         — per top-level instruction: result + unique operand bytes.
+                        Fusion-internal buffers are excluded (they live in
+                        registers/VMEM, not HBM) — post-fusion HLO boundaries are the
+                        closest static proxy for real HBM traffic.
+  * collectives       — operand bytes of every all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute, x trip
+                        counts, classified in-pod (ICI) vs cross-pod (DCN) from
+                        replica groups (pod = device_id // pod_size).
+
+Conventions (documented for the §Roofline report):
+  * All numbers are PER DEVICE — post-SPMD HLO is the per-partition program.
+  * Elementwise/reduce flops are ignored (dots dominate; matches MFU convention).
+  * ``to_apply`` reducer bodies are ignored (O(1) work per application).
+  * Branches of conditionals contribute their max.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims_s: str) -> Tuple[int, int]:
+    """(bytes, elems) for one dtype[dims] string."""
+    elems = 1
+    for d in dims_s.split(","):
+        if d:
+            elems *= int(d)
+    return elems * DTYPE_BYTES.get(dtype, 4), elems
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes for a (possibly tuple) HLO type string."""
+    return sum(_shape_bytes(m.group(1), m.group(2))[0]
+               for m in _SHAPE_RE.finditer(type_str))
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the paren that closes s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    operand_str: str
+    attrs: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _type_bytes(self.type_str)
+
+    def operand_names(self) -> List[str]:
+        return [m.group(1) for m in _NAME_RE.finditer(self.operand_str)]
+
+    def called(self) -> List[Tuple[str, str]]:
+        out = []
+        for kind, attr in (("while_cond", "condition"), ("while_body", "body"),
+                           ("fusion", "calls"), ("call", "to_apply")):
+            m = re.search(attr + r"=%([\w\.\-]+)", self.attrs)
+            if m:
+                k = "reducer" if (attr == "to_apply" and
+                                  self.opcode not in ("call", "custom-call")) else kind
+                out.append((k, m.group(1)))
+        m = re.search(r"branch_computations=\{([^}]*)\}", self.attrs)
+        if m:
+            for name in _NAME_RE.finditer(m.group(1)):
+                out.append(("branch", name.group(1)))
+        return out
+
+    def trip_count(self) -> int:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', self.attrs)
+        return int(m.group(1)) if m else 1
+
+    def op_name(self) -> str:
+        m = re.search(r'op_name="([^"]*)"', self.attrs)
+        return m.group(1) if m else ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+# opcodes that move no HBM bytes of their own (bodies/consumers account for them)
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "domain",
+             "opt-barrier", "while", "call", "conditional", "copy-done"}
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse HLO text -> ({name: Computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if line.endswith("{") and ("= " not in line.split("(")[0]):
+            # computation header: [ENTRY] %name (params) -> type {
+            is_entry = line.startswith("ENTRY")
+            m = _NAME_RE.search(line)
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        body = line[5:] if line.startswith("ROOT ") else line
+        if not body.startswith("%"):
+            continue
+        eq = body.find(" = ")
+        if eq < 0:
+            continue
+        name = body[1:eq]
+        rhs = body[eq + 3:]
+        # type: balanced parens if tuple, else up to first space
+        if rhs.startswith("("):
+            t_end = _balanced(rhs, 0)
+        else:
+            t_end = rhs.find(" ")
+            if t_end < 0:
+                continue
+        type_str = rhs[:t_end]
+        rest = rhs[t_end:].lstrip()
+        p = rest.find("(")
+        if p < 0:
+            continue
+        opcode = rest[:p].strip()
+        op_end = _balanced(rest, p)
+        operand_str = rest[p + 1:op_end - 1]
+        attrs = rest[op_end:]
+        cur.instrs.append(Instr(name, opcode, type_str, operand_str, attrs))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+# ------------------------------------------------------------------ replica groups
+def _iota_groups(spec: str) -> Optional[List[List[int]]]:
+    """Parse iota replica-group list: [G,S]<=[d0,d1,...]T(p0,p1,...) | [G,S]<=[N]."""
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", spec)
+    if not m:
+        return None
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(d) for d in m.group(3).split(",")]
+    total = 1
+    for d in dims:
+        total *= d
+    ids = list(range(total))
+    if m.group(4):
+        perm = [int(p) for p in m.group(4).split(",")]
+        # reshape ids to dims, transpose by perm, flatten
+        strides = [0] * len(dims)
+        acc = 1
+        for i in range(len(dims) - 1, -1, -1):
+            strides[i] = acc
+            acc *= dims[i]
+        new_dims = [dims[p] for p in perm]
+        out = []
+
+        def rec(prefix):
+            if len(prefix) == len(new_dims):
+                idx = sum(prefix[i] * strides[perm[i]] for i in range(len(perm)))
+                out.append(ids[idx])
+                return
+            for v in range(new_dims[len(prefix)]):
+                rec(prefix + [v])
+
+        rec([])
+        ids = out
+    return [ids[i * s:(i + 1) * s] for i in range(g)]
+
+
+def _explicit_groups(spec: str) -> List[List[int]]:
+    return [[int(x) for x in grp.split(",") if x]
+            for grp in re.findall(r"\{([\d,]*)\}", spec)]
+
+
+def groups_cross_pod(attrs: str, pod_size: int, n_devices: int) -> bool:
+    """True if any replica group (or permute pair) spans a pod boundary."""
+    if pod_size <= 0 or pod_size >= n_devices:
+        return False
+    m = re.search(r"source_target_pairs=\{([^=]*?)\}\}", attrs)
+    if m:
+        pairs = _explicit_groups("{" + m.group(1) + "}}")
+        return any(len(p) == 2 and p[0] // pod_size != p[1] // pod_size
+                   for p in pairs)
+    m = re.search(r"replica_groups=(\[\d+,\d+\]<=\[[\d,]+\](?:T\([\d,]+\))?)", attrs)
+    groups = _iota_groups(m.group(1)) if m else None
+    if groups is None:
+        m = re.search(r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}", attrs)
+        if not m:
+            return False
+        groups = _explicit_groups(m.group(1))
+    for g in groups:
+        pods = {d // pod_size for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+# ----------------------------------------------------------------------- accounting
+@dataclasses.dataclass
+class CollectiveRecord:
+    opcode: str
+    bytes: int          # operand bytes x executions
+    cross_pod: bool
+    op_name: str
+    count: int
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[CollectiveRecord] = dataclasses.field(default_factory=list)
+    # bytes keyed by while-nesting depth relative to the entry computation.
+    # Deep loops (flash kv-block loop, SSD chunk loop) are kernel-internal tiles
+    # that live in VMEM under the Pallas TPU kernels; report.py splits on this.
+    hbm_by_depth: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: int, shift: int = 0) -> "HloStats":
+        return HloStats(self.flops * k, self.hbm_bytes * k,
+                        [dataclasses.replace(c, bytes=c.bytes * k,
+                                             count=c.count * k)
+                         for c in self.collectives],
+                        {d + shift: b * k for d, b in self.hbm_by_depth.items()})
+
+    def __iadd__(self, o: "HloStats") -> "HloStats":
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.collectives.extend(o.collectives)
+        for d, b in o.hbm_by_depth.items():
+            self.hbm_by_depth[d] = self.hbm_by_depth.get(d, 0.0) + b
+        return self
+
+    @property
+    def collective_bytes(self) -> int:
+        return sum(c.bytes for c in self.collectives)
+
+    @property
+    def cross_pod_bytes(self) -> int:
+        return sum(c.bytes for c in self.collectives if c.cross_pod)
+
+    @property
+    def in_pod_bytes(self) -> int:
+        return sum(c.bytes for c in self.collectives if not c.cross_pod)
+
+    def by_opcode(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.collectives:
+            key = c.opcode + (":dcn" if c.cross_pod else ":ici")
+            out[key] = out.get(key, 0) + c.bytes
+        return out
+
+    def top_collectives(self, n: int = 12) -> List[dict]:
+        merged: Dict[Tuple[str, str, bool], Tuple[int, int]] = {}
+        for c in self.collectives:
+            k = (c.opcode, c.op_name, c.cross_pod)
+            b, cnt = merged.get(k, (0, 0))
+            merged[k] = (b + c.bytes, cnt + c.count)
+        rows = [{"opcode": k[0], "op_name": k[1][:120],
+                 "link": "dcn" if k[2] else "ici", "bytes": v[0], "count": v[1]}
+                for k, v in merged.items()]
+        rows.sort(key=lambda r: -r["bytes"])
+        return rows[:n]
+
+
+# ops through which a fusion parameter is consumed lazily (per needed element)
+_PASSTHROUGH = {"bitcast", "copy", "reshape", "convert", "transpose"}
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_param_usage(body: "Computation"):
+    """Per-parameter read accounting inside a fusion computation.
+
+    Fusions compute lazily per output element, so a parameter consumed ONLY
+    through a (dynamic-)slice/gather is read only window-sized — critical for
+    scan bodies, where consumers fuse the dynamic-slice of the full stacked
+    [L, ...] weight/residual tensors (charging the stack per layer would
+    over-count O(L) per iteration, O(L^2) per step).
+
+    Returns (usage: {param_idx: bytes | "full"}, aliased: set of param_idx that
+    are in-place DUS targets, dus_bytes: 2x update bytes total).
+    """
+    local = {i.name: i.type_str for i in body.instrs}
+    src: Dict[str, int] = {}
+    for i in body.instrs:
+        if i.opcode == "parameter":
+            tail = i.operand_str.strip()
+            if tail.isdigit():
+                src[i.name] = int(tail)
+        elif i.opcode in _PASSTHROUGH:
+            ops = i.operand_names()
+            if len(ops) == 1 and ops[0] in src:
+                src[i.name] = src[ops[0]]
+
+    usage: Dict[int, object] = {}
+    aliased: set = set()
+    dus_bytes = 0.0
+    for i in body.instrs:
+        if i.opcode in ("parameter",) or i.opcode in _PASSTHROUGH:
+            continue
+        for j, op in enumerate(i.operand_names()):
+            idx = src.get(op)
+            if idx is None:
+                continue
+            if i.opcode in _SLICING and j == 0:
+                prev = usage.get(idx, 0.0)
+                if prev != "full":
+                    usage[idx] = prev + _type_bytes(i.type_str)
+            elif i.opcode == "dynamic-update-slice" and j == 0:
+                aliased.add(idx)
+            else:
+                usage[idx] = "full"
+        if i.opcode == "dynamic-update-slice":
+            ops = i.operand_names()
+            if len(ops) >= 2 and ops[1] in local:
+                dus_bytes += 2.0 * _type_bytes(local[ops[1]])
+    return usage, aliased, dus_bytes
+
+
+def _instr_bytes(ins: Instr, shapes: Dict[str, str],
+                 comps: Dict[str, "Computation"]) -> float:
+    """HBM traffic of one top-level instruction.
+
+    Slice-like ops move only the window (XLA cost-analysis convention); in-place
+    dynamic-update-slice (incl. inside fusions — scan-stacked outputs, KV-cache
+    writes) moves 2x the update, not the full carried buffer; fusion parameters
+    consumed only through slices are charged window-sized (see
+    _fusion_param_usage).
+    """
+    ops = ins.operand_names()
+
+    def op_bytes(i: int) -> int:
+        return _type_bytes(shapes[ops[i]]) if i < len(ops) and ops[i] in shapes \
+            else 0
+
+    if ins.opcode in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * ins.result_bytes
+    if ins.opcode == "dynamic-update-slice":
+        return 2.0 * op_bytes(1)
+    if ins.opcode == "scatter":
+        return 2.0 * op_bytes(2) + op_bytes(1)
+
+    if ins.opcode == "fusion":
+        called = [c for k, c in ins.called() if k == "fusion"]
+        if called and called[0] in comps:
+            usage, aliased, dus_bytes = _fusion_param_usage(comps[called[0]])
+            charge = dus_bytes
+            if not aliased:
+                charge += float(ins.result_bytes)
+            seen = set()
+            for k, op in enumerate(ops):
+                if op not in shapes or op in seen:
+                    continue
+                seen.add(op)
+                if k in aliased:
+                    continue                      # in-place DUS target
+                u = usage.get(k, "full")
+                charge += _type_bytes(shapes[op]) if u == "full" else u
+            return charge
+
+    default = float(ins.result_bytes)
+    seen = set()
+    for op in ops:
+        if op in shapes and op not in seen:
+            default += _type_bytes(shapes[op])
+            seen.add(op)
+    return default
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    res = _first_shape(ins.type_str)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    relems = 1
+    for d in rdims:
+        relems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    ops = ins.operand_names()
+    contr = 1
+    if ops and ops[0] in shapes:
+        lhs = _first_shape(shapes[ops[0]])
+        if lhs:
+            for c in cdims:
+                if c < len(lhs[1]):
+                    contr *= lhs[1][c]
+    return 2.0 * relems * contr
+
+
+def module_stats(text: str, *, pod_size: int = 0,
+                 n_devices: int = 1) -> HloStats:
+    """Aggregate stats for the entry computation, loops multiplied out."""
+    comps, entry = parse_module(text)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.type_str
+
+    memo: Dict[Tuple[str, bool], HloStats] = {}
+
+    def visit(name: str, in_fusion: bool) -> HloStats:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloStats()  # cycle guard (HLO has none, but be safe)
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        st = HloStats()
+        for ins in comp.instrs:
+            if ins.opcode == "dot" or ins.opcode == "convolution":
+                st.flops += _dot_flops(ins, shapes)
+            if not in_fusion and ins.opcode not in _FREE_OPS:
+                b = _instr_bytes(ins, shapes, comps)
+                st.hbm_bytes += b
+                st.hbm_by_depth[0] = st.hbm_by_depth.get(0, 0.0) + b
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVE_OPS and not ins.opcode.endswith("-done"):
+                ob = sum(_type_bytes(shapes[op]) for op in ins.operand_names()
+                         if op in shapes)
+                st.collectives.append(CollectiveRecord(
+                    base, ob, groups_cross_pod(ins.attrs, pod_size, n_devices),
+                    ins.op_name(), 1))
+            branches: List[HloStats] = []
+            for kind, cname in ins.called():
+                if kind == "reducer":
+                    continue
+                sub = visit(cname, in_fusion or kind == "fusion")
+                if kind in ("while_body", "while_cond"):
+                    st += sub.scaled(ins.trip_count(), shift=1)
+                elif kind == "branch":
+                    branches.append(sub)
+                else:
+                    st += sub.scaled(1)
+            if branches:
+                st += max(branches, key=lambda s: s.flops + s.hbm_bytes)
+        memo[key] = st
+        return st
+
+    return visit(entry, False)
+
+
+def stats_to_json(st: HloStats) -> dict:
+    return {
+        "flops": st.flops,
+        "hbm_bytes": st.hbm_bytes,
+        "hbm_by_depth": {str(k): v for k, v in sorted(st.hbm_by_depth.items())},
+        "collective_bytes": st.collective_bytes,
+        "cross_pod_bytes": st.cross_pod_bytes,
+        "in_pod_bytes": st.in_pod_bytes,
+        "by_opcode": st.by_opcode(),
+        "top_collectives": st.top_collectives(),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(stats_to_json(module_stats(open(sys.argv[1]).read(),
+                                                pod_size=256, n_devices=512)),
+                     indent=2))

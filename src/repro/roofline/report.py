@@ -1,0 +1,184 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run artifacts.
+
+Conventions (see EXPERIMENTS.md §Roofline for the full methodology):
+  * All HLO quantities are PER DEVICE (post-SPMD HLO is the per-partition
+    program); hardware peaks are per chip, so terms divide directly.
+  * compute term    = hlo_flops / 197e12           (TPU v5e bf16 peak)
+  * memory term     = framework_hbm_bytes / 819e9  (HBM bw). Framework bytes
+    exclude while-depth >= kernel_depth buffers — flash/SSD inner-loop tiles
+    that live in VMEM under the Pallas TPU kernels, not HBM.
+  * collective term = in_pod_bytes / 50e9 + cross_pod_bytes / 6.25e9
+    (ICI link bw; DCN per-host bw for the pod axis).
+  * MODEL_FLOPS     = useful flops per device per step:
+      train   6*N*D    prefill  2*N*D    decode  2*N*B     (N = active params)
+  * roofline_fraction (the §Perf score) = (MODEL_FLOPS/peak) / max(terms):
+    the fraction of the step's bound time doing useful model math. Also reported:
+    compute_fraction = compute_s / max(terms) (how compute-bound the cell is)
+    and MODEL/HLO (remat + redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import (CHIPS_PER_POD, DCN_BW, HBM_BW, ICI_BW,
+                               PEAK_FLOPS_BF16)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    cell: str
+    mesh: str
+    tag: str
+    step: str
+    chips: int
+    hlo_flops: float
+    model_flops: float
+    framework_bytes: float
+    kernel_bytes: float
+    ici_bytes: float
+    dcn_bytes: float
+    mem_gb: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def model_compute_s(self) -> float:
+        return self.model_flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.framework_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s, 1e-12)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        return self.model_compute_s / self.bound_s
+
+    @property
+    def compute_fraction(self) -> float:
+        return self.compute_s / self.bound_s
+
+    @property
+    def model_over_hlo(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1e-12)
+
+    def advice(self) -> str:
+        if self.dominant == "memory":
+            return ("memory-bound: cast collectives/intermediates to bf16, "
+                    "sequence-shard the residual (sp=true), raise arithmetic "
+                    "intensity (fewer, larger per-device matmuls — less TP)")
+        if self.dominant == "collective":
+            big = "dcn" if self.dcn_bytes / DCN_BW > self.ici_bytes / ICI_BW \
+                else "ici"
+            if big == "dcn":
+                return ("DCN-bound: amortize the pod boundary — Titchener "
+                        "local-sync (H local steps + int8 delta) instead of "
+                        "per-step gradient all-reduce")
+            return ("ICI-bound: replace TP all-reduces with reduce-scatter + "
+                    "all-gather (sp=true), bf16 collectives, overlap with "
+                    "compute")
+        return ("compute-bound: reduce remat recompute (remat=dots), larger "
+                "microbatches; near roofline otherwise")
+
+
+def kernel_depth_for(rec: dict) -> Optional[int]:
+    step = rec["step"]
+    if step == "decode":
+        return None
+    opts = rec.get("options", {})
+    if opts.get("dp_only"):
+        mb = 1                       # dp_only forces a single microbatch
+    else:
+        mb = opts.get("num_microbatches", 0) or (8 if step == "train" else 1)
+    if step == "train" and mb > 1:
+        return 3
+    return 2
+
+
+def model_flops_per_device(rec: dict) -> float:
+    n = rec["active_params"]
+    toks = rec["tokens_per_step"]
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[rec["step"]]
+    return mult * n * toks / rec["chips"]
+
+
+def row_from_artifact(rec: dict) -> RooflineRow:
+    hs = rec["hlo_stats"]
+    kd = kernel_depth_for(rec)
+    by_depth = {int(k): v for k, v in hs.get("hbm_by_depth", {}).items()}
+    if kd is None:
+        fw = sum(by_depth.values())
+        kern = 0.0
+    else:
+        fw = sum(v for d, v in by_depth.items() if d < kd)
+        kern = sum(v for d, v in by_depth.items() if d >= kd)
+    mm = rec.get("memory_analysis", {})
+    mem_gb = (mm.get("argument_size_in_bytes", 0)
+              + mm.get("temp_size_in_bytes", 0)
+              + mm.get("output_size_in_bytes", 0)
+              - mm.get("alias_size_in_bytes", 0)) / 1e9
+    return RooflineRow(
+        cell=rec["cell"], mesh=rec["mesh"], tag=rec.get("tag", "baseline"),
+        step=rec["step"], chips=rec["chips"], hlo_flops=hs["flops"],
+        model_flops=model_flops_per_device(rec),
+        framework_bytes=fw, kernel_bytes=kern,
+        ici_bytes=hs["in_pod_bytes"], dcn_bytes=hs["cross_pod_bytes"],
+        mem_gb=mem_gb)
+
+
+def load_rows(mesh: str = "single", tag: str = "baseline") -> List[RooflineRow]:
+    rows = []
+    d = ARTIFACTS / mesh
+    if not d.exists():
+        return rows
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag", "baseline") != tag:
+            continue
+        rows.append(row_from_artifact(rec))
+    return rows
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    hdr = ("| cell | step | compute s | memory s | collective s | bound s | "
+           "dominant | RF | CF | MODEL/HLO | mem GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: r.cell):
+        out.append(
+            f"| {r.cell} | {r.step} | {r.compute_s:.3f} | {r.memory_s:.3f} | "
+            f"{r.collective_s:.3f} | {r.bound_s:.3f} | {r.dominant} | "
+            f"{r.roofline_fraction:.2f} | {r.compute_fraction:.2f} | "
+            f"{r.model_over_hlo:.2f} | {r.mem_gb:.1f} |\n")
+    return "".join(out)
+
+
+def to_json(rows: List[RooflineRow]) -> list:
+    return [{**dataclasses.asdict(r),
+             "compute_s": r.compute_s, "memory_s": r.memory_s,
+             "collective_s": r.collective_s, "bound_s": r.bound_s,
+             "dominant": r.dominant,
+             "roofline_fraction": r.roofline_fraction,
+             "compute_fraction": r.compute_fraction,
+             "model_over_hlo": r.model_over_hlo,
+             "advice": r.advice()} for r in rows]

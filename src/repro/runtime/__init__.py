@@ -1,0 +1,1 @@
+"""Runtime: JAX-executing local control planes, train/serve loops, elasticity."""

@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real single
+CPU device (the 512-device override belongs exclusively to launch/dryrun.py)."""
+import pytest
+
+from repro.core.plane import ManagementPlane, SimLocalPlane
+
+
+@pytest.fixture
+def plane():
+    p = ManagementPlane()
+    p.add_cluster("master", is_master=True)
+    p.add_cluster("onprem-a")
+    p.add_cluster("onprem-b")
+    return p
+
+
+def make_plane(n_private: int = 2, rates=None, caps=None) -> ManagementPlane:
+    """Master is control-plane-only (the paper's always-on public master);
+    compute jobs land on private clusters via requires=("cpu",)."""
+    p = ManagementPlane()
+    p.add_cluster("master", is_master=True,
+                  local_plane=SimLocalPlane(caps=("control",)))
+    for i in range(n_private):
+        rate = (rates or {}).get(i, 1.0)
+        cap = (caps or {}).get(i, ("cpu",))
+        p.add_cluster(f"onprem-{i}", local_plane=SimLocalPlane(cap, rate))
+    return p
+
+
+CPU = {"requires": ("cpu",)}

@@ -1,0 +1,74 @@
+"""Dispatcher: routing rules, capability matching, placement, stragglers."""
+import pytest
+
+from repro.core.dispatcher import RoutingRule
+from tests.conftest import make_plane
+
+
+def test_capability_matching():
+    plane = make_plane(2, caps={0: ("cpu",), 1: ("cpu", "gpu")})
+    jid = plane.submit_job("sim", steps=5, tags={"requires": ("gpu",)})
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]
+    assert placed["cluster"] == "onprem-1"
+
+
+def test_no_eligible_cluster_raises():
+    plane = make_plane(1)
+    with pytest.raises(RuntimeError):
+        plane.submit_job("sim", steps=5, tags={"requires": ("tpu-v5e",)})
+
+
+def test_routing_rule_compliance_pinning(plane):
+    plane.add_routing_rule(RoutingRule(
+        name="pii-stays-onprem",
+        match=lambda job: job.get("tags", {}).get("pii"),
+        clusters=["onprem-a"]))
+    jid = plane.submit_job("sim", steps=5, tags={"pii": True})
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]
+    assert placed["cluster"] == "onprem-a"
+
+
+def test_least_loaded_placement(plane):
+    # saturate onprem-a, then expect next jobs elsewhere
+    for _ in range(3):
+        plane.add_routing_rule(RoutingRule(
+            name="pin", match=lambda j: j["job_id"] == "pin-1",
+            clusters=["onprem-a"]))
+    plane.submit_job("sim", steps=100, job_id="pin-1")
+    plane.tick(n=2)
+    jid = plane.submit_job("sim", steps=5)
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]
+    assert placed["cluster"] != "onprem-a"
+
+
+def test_straggler_redispatch():
+    plane = make_plane(3, rates={0: 1.0, 1: 1.0, 2: 0.01})
+    pinning = {"on": True}                      # pins apply to initial placement only
+    for i in range(3):
+        plane.add_routing_rule(RoutingRule(
+            name=f"pin-j{i}",
+            match=lambda j, _i=i: pinning["on"] and j["job_id"] == f"j{_i}",
+            clusters=[f"onprem-{i}"]))
+    jids = [plane.submit_job("sim", steps=50, job_id=f"j{i}",
+                             tags={"requires": ("cpu",)})
+            for i in range(3)]
+    pinning["on"] = False
+    plane.tick(n=3)
+    rates = {j: plane.job_status(j)["rate"] for j in jids}
+    slow = [j for j, r in rates.items() if r <= 0.011]
+    assert slow
+    moved = plane.dispatcher.check_stragglers()
+    assert any(m.startswith(f"{slow[0]}:") for m in moved)
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{slow[0]}/placement"})["value"]
+    assert placed["cluster"] != "onprem-2"
+
+
+def test_jobs_complete_and_report(plane):
+    jid = plane.submit_job("sim", steps=5)
+    assert plane.run_until_done([jid], max_ticks=30)
+    st = plane.job_status(jid)
+    assert st["status"] == "done" and st["progress"] == 5.0

@@ -1,0 +1,160 @@
+"""Paper §4 Algorithms 1-5: discovery, connectivity, access control.
+
+The hypothesis test at the bottom is the paper's core invariant, checked over
+random Pod-Service graphs and partitions:
+  every pod with f[p,s]=1 reaches s BY NAME from its own partition;
+  every pod with f[p,s]=0 is denied — regardless of where s lives.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plane import ManagementPlane
+from repro.core.service_graph import AppSpec, Pod, Service
+from repro.core.transport import DeliveryError
+from repro.pipelines.services import ServiceClient, ServiceEndpoint
+
+
+def build_spec(master_hosts=True):
+    """broker on master, db on onprem-a; consumers spread across clusters."""
+    services = (Service("broker", 6379, ("broker-pod",)),
+                Service("db", 5432, ("db-pod",)))
+    pods = (Pod("broker-pod", ()), Pod("db-pod", ()),
+            Pod("worker-pub", ("broker", "db")),
+            Pod("worker-priv", ("broker", "db")),
+            Pod("rogue", ()))
+    partition = {"broker-pod": "master",
+                 "db-pod": "onprem-a",
+                 "worker-pub": "master",
+                 "worker-priv": "onprem-b",
+                 "rogue": "onprem-b"}
+    return AppSpec(services, pods, partition)
+
+
+@pytest.fixture
+def configured(plane):
+    spec = build_spec()
+    plane.upload_spec(spec)
+    # register echo handlers where each service actually lives
+    for svc in ("broker", "db"):
+        host = spec.host_cluster(svc)
+        ServiceEndpoint(plane.fabric, spec, plane.agents[host].state, svc,
+                        lambda m, _s=svc: {"ok": True, "svc": _s,
+                                           "echo": m.get("x")})
+    return plane, spec
+
+
+def client(plane, spec, pod):
+    cluster = spec.partition[pod]
+    return ServiceClient(plane.fabric, plane.agents[cluster].state, pod)
+
+
+# ------------------------------------------------------------------ Algorithm 1
+def test_dns_native_vs_dummy(configured):
+    plane, spec = configured
+    master = plane.agents["master"].state
+    priv = plane.agents["onprem-b"].state
+    # broker hosted on master: real IP there, dummy elsewhere
+    assert master.dns["broker"][0].startswith("10.0.1.")
+    assert priv.dns["broker"][0].startswith(f"10.{priv.idx}.2.")
+    # every cluster resolves every service name
+    for ag in plane.agents.values():
+        assert set(ag.state.dns) == {"broker", "db"}
+
+
+# ------------------------------------------------------------------ Algorithm 2
+def test_port_determinism(configured):
+    plane, spec = configured
+    # sorted-rank ports: identical eport/iport tables in every cluster
+    eports = {c: ag.state.eport for c, ag in plane.agents.items()}
+    for svc in ("broker", "db"):
+        ports = {t[svc] for t in eports.values() if svc in t}
+        assert len(ports) <= 1
+
+
+# --------------------------------------------------------------- reachability
+def test_pod_reaches_service_cross_cloud(configured):
+    plane, spec = configured
+    # private worker -> master-hosted broker (Figure 2 path)
+    resp = client(plane, spec, "worker-priv").call("broker", {"x": 42})
+    assert resp == {"ok": True, "svc": "broker", "echo": 42}
+    # private worker -> other-private-hosted db (hub relay path)
+    resp = client(plane, spec, "worker-priv").call("db", {"x": 7})
+    assert resp["svc"] == "db"
+    # public worker -> private db
+    resp = client(plane, spec, "worker-pub").call("db", {"x": 1})
+    assert resp["svc"] == "db"
+
+
+def test_traffic_crosses_boundary_only_when_needed(configured):
+    plane, spec = configured
+    before = plane.fabric.cross_cluster_bytes()
+    # master-local call: worker-pub -> broker (both on master)
+    client(plane, spec, "worker-pub").call("broker", {"x": 0})
+    assert plane.fabric.cross_cluster_bytes() == before
+    # cross call bumps the ledger
+    client(plane, spec, "worker-priv").call("broker", {"x": 0})
+    assert plane.fabric.cross_cluster_bytes() > before
+
+
+# ------------------------------------------------------------------ Algorithm 3
+def test_access_control_default_deny(configured):
+    plane, spec = configured
+    with pytest.raises(DeliveryError):
+        client(plane, spec, "rogue").call("broker", {"x": 1})
+    with pytest.raises(DeliveryError):
+        client(plane, spec, "rogue").call("db", {"x": 1})
+
+
+def test_acl_audit_covers_expected_flows(configured):
+    plane, spec = configured
+    from repro.core.access_control import audit
+    for ag in plane.agents.values():
+        assert audit(spec, ag.state) == []
+
+
+# ------------------------------------------------- the paper invariant (property)
+@st.composite
+def app_specs(draw):
+    n_clusters = draw(st.integers(2, 4))
+    clusters = [f"c{i}" for i in range(n_clusters)]   # c0 = master
+    n_services = draw(st.integers(1, 4))
+    n_consumers = draw(st.integers(1, 5))
+    services, pods, partition = [], [], {}
+    for s in range(n_services):
+        back = f"back{s}"
+        host = clusters[draw(st.integers(0, n_clusters - 1))]
+        services.append(Service(f"svc{s}", 7000 + s, (back,)))
+        pods.append(Pod(back, ()))
+        partition[back] = host
+    svc_names = [s.name for s in services]
+    for c in range(n_consumers):
+        needs = tuple(sorted(draw(st.sets(st.sampled_from(svc_names),
+                                          max_size=len(svc_names)))))
+        pods.append(Pod(f"pod{c}", needs))
+        partition[f"pod{c}"] = clusters[draw(st.integers(0, n_clusters - 1))]
+    return clusters, AppSpec(tuple(services), tuple(pods), partition)
+
+
+@settings(max_examples=25, deadline=None)
+@given(app_specs())
+def test_fps_invariant(spec_case):
+    clusters, spec = spec_case
+    plane = ManagementPlane(master="c0")
+    plane.add_cluster("c0", is_master=True)
+    for c in clusters[1:]:
+        plane.add_cluster(c)
+    plane.upload_spec(spec)
+    for svc in spec.services:
+        host = spec.host_cluster(svc.name)
+        ServiceEndpoint(plane.fabric, spec, plane.agents[host].state,
+                        svc.name, lambda m, _s=svc.name: {"svc": _s})
+    for pod in spec.pods:
+        cl = ServiceClient(plane.fabric,
+                           plane.agents[spec.partition[pod.name]].state,
+                           pod.name)
+        for svc in spec.services:
+            if svc.name in pod.needs:
+                assert cl.call(svc.name, {})["svc"] == svc.name
+            else:
+                with pytest.raises(DeliveryError):
+                    cl.call(svc.name, {})

@@ -1,0 +1,108 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED config of each
+family instantiates and runs one forward + one train step on CPU, asserting
+output shapes and no NaNs. Also checks prefill+decode vs full-forward logit
+consistency for every family (the serving path computes the same function).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as configs
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import MeshPlan
+
+ARCHS = configs.names()
+B, S = 2, 16
+
+
+def build(arch, **overrides):
+    cfg = configs.get(arch).reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat="none", **overrides)
+    plan = MeshPlan(mesh=make_test_mesh(), fsdp=False)
+    model = Model(cfg, plan)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def batch_for(cfg, key, b=B, s=S):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)}
+    batch["targets"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)
+    batch["loss_mask"] = jnp.ones((b, s), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg, model, params = build(arch)
+    batch = batch_for(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_improves_nothing_breaks(arch):
+    cfg, model, params = build(arch)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(peak_lr=1e-3,
+                                                      warmup_steps=1,
+                                                      total_steps=100), 1))
+    batch = batch_for(cfg, jax.random.PRNGKey(2))
+    state, m = step(state, batch)
+    state, m2 = step(state, batch)           # same batch: loss must not explode
+    assert np.isfinite(m2["loss"]) and np.isfinite(m2["grad_norm"])
+    assert int(state["opt"]["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """decode(prefill(t[:k]), t[k]) logits == forward(t[:k+1]) last logits.
+
+    MoE runs with a high capacity factor here: capacity-based routing drops
+    tokens shape-dependently, so exact train/decode equivalence only holds
+    when no token is dropped (drop behaviour is tested in test_moe_routing).
+    """
+    overrides = {"capacity_factor": 8.0} if \
+        configs.get(arch).family == "moe" else {}
+    cfg, model, params = build(arch, **overrides)
+    key = jax.random.PRNGKey(3)
+    full = batch_for(cfg, key, b=B, s=S)
+    k = S - 1
+    prompt = {**full, "tokens": full["tokens"][:, :k]}
+    prompt.pop("targets"), prompt.pop("loss_mask")
+    logits_full, _ = jax.jit(model.forward)(params, full)
+    last_logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=S + 4))(params, prompt)
+    # prefill's last logits == forward logits at position k-1
+    np.testing.assert_allclose(
+        np.asarray(last_logits, np.float32),
+        np.asarray(logits_full[:, k - 1], np.float32), rtol=0.08, atol=0.08)
+    step_logits, cache = jax.jit(model.decode_step)(
+        params, full["tokens"][:, k:k + 1], cache)
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32),
+        np.asarray(logits_full[:, k], np.float32), rtol=0.08, atol=0.08)
+
+
+def test_param_count_analytics_match_actual():
+    for arch in ARCHS:
+        cfg = configs.get(arch).reduced()
+        model = Model(cfg, MeshPlan(mesh=make_test_mesh(), fsdp=False))
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(
+            model.abstract_params()))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.02, \
+            f"{arch}: analytic {analytic} vs actual {actual}"

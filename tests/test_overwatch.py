@@ -1,0 +1,70 @@
+"""Overwatch: strongly-consistent store semantics (paper §2.iii)."""
+import pytest
+
+from tests.conftest import make_plane
+
+
+def test_put_get_delete_range(plane):
+    ow = plane.agents["onprem-a"].ow
+    r1 = ow.put("/a/x", 1)
+    r2 = ow.put("/a/y", {"v": 2})
+    assert r2 > r1                        # revisions are monotone
+    assert ow.get("/a/x") == 1
+    assert ow.range("/a/") == {"/a/x": 1, "/a/y": {"v": 2}}
+    ow.delete("/a/x")
+    assert ow.get("/a/x") is None
+
+
+def test_cas_linearizable(plane):
+    ow_a = plane.agents["onprem-a"].ow
+    ow_b = plane.agents["onprem-b"].ow
+    rev = ow_a.put("/cfg", "v0")
+    assert ow_b.cas("/cfg", "v1", expect_revision=rev)
+    assert not ow_a.cas("/cfg", "v2", expect_revision=rev)  # stale revision
+    assert ow_a.get("/cfg") == "v1"
+
+
+def test_op_log_is_total_order(plane):
+    ow = plane.agents["master"].ow
+    for i in range(5):
+        ow.put(f"/log/{i}", i)
+    log = plane.overwatch.op_log
+    revs = [r for r, *_ in log]
+    assert revs == sorted(revs) and len(set(revs)) == len(revs)
+
+
+def test_lease_expiry_deletes_keys_and_notifies():
+    plane = make_plane(1)
+    ow = plane.agents["onprem-0"].ow
+    events = []
+    plane.overwatch.watch("/svc/", lambda *a: events.append(a))
+    lease = ow.lease_grant(ttl=2.0)
+    ow.put("/svc/ephemeral", "x", lease=lease)
+    plane.tick(n=1)
+    assert ow.get("/svc/ephemeral") == "x"
+    plane.tick(n=5)                        # lease expires, no keepalive
+    assert ow.get("/svc/ephemeral") is None
+    assert any(e[0] == "delete" for e in events)
+
+
+def test_keepalive_sustains_lease():
+    plane = make_plane(1)
+    ow = plane.agents["onprem-0"].ow
+    lease = ow.lease_grant(ttl=2.0)
+    ow.put("/svc/alive", 1, lease=lease)
+    for _ in range(6):
+        plane.tick()
+        ow.lease_keepalive(lease)
+    assert ow.get("/svc/alive") == 1
+
+
+def test_cluster_registration_is_lease_backed(plane):
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/clusters/onprem-a"})["value"]["idx"] >= 1
+    plane.fabric.partition_cluster("onprem-a")
+    plane.tick(n=8)                        # heartbeats fail -> lease expires
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/clusters/onprem-a"})["value"] is None
+    # master + onprem-b still registered
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/clusters/onprem-b"})["value"] is not None

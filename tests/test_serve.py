@@ -1,0 +1,42 @@
+"""Serving: continuous batching must not change results (greedy decoding is
+batch-size invariant), slots must be reused, EOS must free slots early."""
+import pytest
+
+from repro.runtime.serve_loop import Server, ServeJobConfig
+
+PROMPTS = [[1, 2, 3, 4], [9, 8, 7], [5, 5], [2, 4, 6, 8, 10]]
+
+
+def generate(slots, prompts, max_new=6, **kw):
+    sv = Server(ServeJobConfig(arch="qwen3-0.6b", slots=slots, max_len=64,
+                               seed=11, **kw))
+    ids = [sv.submit(p, max_new=max_new) for p in prompts]
+    sv.run()
+    return {i: sv.requests[i].generated for i in ids}, sv
+
+
+def test_batching_invariance():
+    solo, _ = generate(1, PROMPTS)
+    batched, _ = generate(4, PROMPTS)
+    assert list(solo.values()) == list(batched.values())
+
+
+def test_slot_reuse_more_requests_than_slots():
+    out, sv = generate(2, PROMPTS, max_new=4)
+    assert all(len(g) == 4 for g in out.values())
+    assert all(r.done for r in sv.requests.values())
+
+
+def test_eos_frees_slot_early():
+    # run once to discover the first emitted token, then use it as EOS
+    probe, _ = generate(1, [PROMPTS[0]], max_new=4)
+    eos = list(probe.values())[0][0]
+    out, sv = generate(2, [PROMPTS[0]], max_new=8, eos_id=int(eos))
+    gen = list(out.values())[0]
+    assert gen[-1] == eos and len(gen) < 8
+
+
+def test_mixed_lengths_no_head_of_line_blocking():
+    out, sv = generate(2, [[1, 2, 3]] * 2 + [[4, 5, 6]], max_new=3)
+    assert len(out) == 3
+    assert all(len(g) == 3 for g in out.values())
