@@ -2,8 +2,17 @@
 the management-plane numbers a production deployment is sized with).
 
   * register/discover/dispatch/heartbeat wall-time per op at 2..64 clusters
+  * scaling sweep: dispatch / overwatch-range / heartbeat per-op latency at
+    2..256 clusters with a keyspace preloaded to ~20 jobs per cluster (5k+
+    jobs at the top of the sweep) — the hot-path overhaul's acceptance gate is
+    that per-op latency stays flat (within 2x) from 32 to 256 clusters
   * configuration-phase cost: Algorithm 5 runtime + messages for growing S
   * failure recovery: ticks from partition to re-dispatch
+
+``run_json()`` emits the sweep plus the frozen pre-overhaul baseline
+(SEED_BASELINE, measured on the seed implementation whose per-op cost grew
+with total keyspace size) — that is what ``benchmarks/run.py --json``
+records into BENCH_control_plane.json.
 """
 from __future__ import annotations
 
@@ -12,6 +21,31 @@ from typing import Callable, List
 
 from repro.core.plane import ManagementPlane, SimLocalPlane
 from repro.core.service_graph import AppSpec, Pod, Service
+
+SWEEP_SCALES = (2, 8, 32, 64, 128, 256)
+JOBS_PER_CLUSTER = 20
+
+# Pre-overhaul numbers (seed implementation, same sweep, same machine class):
+# per-op cost grew ~14x from 32 to 256 clusters because every dispatch sorted
+# the entire keyspace several times. Frozen here so BENCH_control_plane.json
+# always carries the before/after comparison.
+SEED_BASELINE = {
+    "label": "before (seed, full-keyspace scans)",
+    "rows": [
+        {"clusters": 2, "jobs": 40, "overwatch_range_us": 15.6,
+         "dispatch_us": 63.6, "heartbeat_us": 18.8},
+        {"clusters": 8, "jobs": 160, "overwatch_range_us": 59.7,
+         "dispatch_us": 160.8, "heartbeat_us": 19.3},
+        {"clusters": 32, "jobs": 640, "overwatch_range_us": 184.7,
+         "dispatch_us": 655.6, "heartbeat_us": 17.7},
+        {"clusters": 64, "jobs": 1280, "overwatch_range_us": 260.4,
+         "dispatch_us": 1196.7, "heartbeat_us": 20.7},
+        {"clusters": 128, "jobs": 2560, "overwatch_range_us": 1122.3,
+         "dispatch_us": 3435.4, "heartbeat_us": 32.3},
+        {"clusters": 256, "jobs": 5120, "overwatch_range_us": 2738.5,
+         "dispatch_us": 8935.6, "heartbeat_us": 39.8},
+    ],
+}
 
 
 def _time_us(fn: Callable[[], None], n: int = 50) -> float:
@@ -42,6 +76,68 @@ def bench_plane_ops(n_clusters: int = 8) -> List[tuple]:
 
     rows.append((f"dispatch[{n_clusters}]", _time_us(dispatch, n=20)))
     return rows
+
+
+# ------------------------------------------------------------- scaling sweep
+def sweep_point(n_clusters: int,
+                jobs_per_cluster: int = JOBS_PER_CLUSTER) -> dict:
+    """Per-op latency at one scale, with the keyspace preloaded the way a
+    long-running deployment looks (a placement + status row per job)."""
+    plane = ManagementPlane(message_log_limit=10_000, op_log_limit=10_000)
+    plane.add_cluster("master", is_master=True)
+    for i in range(n_clusters - 1):
+        plane.add_cluster(f"c{i}")
+    names = ["master"] + [f"c{i}" for i in range(n_clusters - 1)]
+    n_jobs = n_clusters * jobs_per_cluster
+    for j in range(n_jobs):
+        c = names[j % len(names)]
+        plane.overwatch.handle(
+            {"op": "put", "key": f"/jobs/pre-{j}/placement",
+             "value": {"cluster": c,
+                       "job": {"job_id": f"pre-{j}", "kind": "sim",
+                               "steps": 10, "tags": {}, "payload": {}},
+                       "clock": 0.0}})
+        plane.overwatch.handle(
+            {"op": "put", "key": f"/jobs/pre-{j}/status",
+             "value": {"cluster": c, "status": "running", "progress": 1.0,
+                       "rate": 1.0, "clock": 0.0}})
+    agent = plane.agents["c0"]
+    row = {"clusters": n_clusters, "jobs": n_jobs}
+    row["overwatch_range_us"] = _time_us(
+        lambda: agent.ow.range("/clusters/master"), n=100)
+    jid = [0]
+
+    def dispatch():
+        jid[0] += 1
+        plane.submit_job("sim", steps=1, job_id=f"bench-{jid[0]}")
+
+    dispatch()                               # warm the dispatch relay channels
+    row["dispatch_us"] = _time_us(dispatch, n=50)
+    row["heartbeat_us"] = _time_us(agent.heartbeat, n=50)
+    return row
+
+
+_SWEEP_CACHE: dict = {}
+
+
+def run_sweep(scales=SWEEP_SCALES) -> dict:
+    # memoized per-process: --json mode consumes the sweep twice (CSV rows +
+    # JSON payload) and the 256-cluster point is the expensive part; caching
+    # also keeps the printed CSV and the recorded JSON from disagreeing
+    key = tuple(scales)
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    rows = [sweep_point(n) for n in scales]
+    by_n = {r["clusters"]: r for r in rows}
+    flat = {}
+    if 32 in by_n and 256 in by_n:
+        for metric in ("dispatch_us", "overwatch_range_us"):
+            flat[metric + "_ratio_256_over_32"] = (
+                by_n[256][metric] / max(by_n[32][metric], 1e-9))
+    result = {"label": "after (indexed overwatch + cached dispatcher views)",
+              "rows": rows, "flatness": flat}
+    _SWEEP_CACHE[key] = result
+    return result
 
 
 def bench_configuration_phase(n_services: int = 16, n_clusters: int = 4):
@@ -92,7 +188,20 @@ def run() -> List[tuple]:
     rows = []
     for n in (2, 8, 32):
         rows += bench_plane_ops(n)
+    for r in run_sweep()["rows"]:
+        tag = f"[{r['clusters']}cl,{r['jobs']}jobs]"
+        rows.append((f"sweep_dispatch{tag}", r["dispatch_us"]))
+        rows.append((f"sweep_overwatch_range{tag}", r["overwatch_range_us"]))
+        rows.append((f"sweep_heartbeat{tag}", r["heartbeat_us"]))
     rows += bench_configuration_phase(8, 4)
     rows += bench_configuration_phase(32, 4)
     rows += bench_failure_recovery()
     return rows
+
+
+def run_json() -> dict:
+    """Structured payload for ``benchmarks/run.py --json``."""
+    return {"before": SEED_BASELINE, "after": run_sweep(),
+            "ops": [{"name": n, "us_per_call": v}
+                    for n, v in bench_plane_ops(8)],
+            "recovery": dict(bench_failure_recovery())}

@@ -6,9 +6,18 @@ Prints ``name,us_per_call,derived`` CSV (derived column empty where N/A).
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run control_plane roofline_bench
+  PYTHONPATH=src python -m benchmarks.run --json control_plane
+
+``--json`` additionally writes a machine-readable ``BENCH_<suite>.json`` per
+suite (into --out-dir, default the current directory), so successive PRs can
+track the perf trajectory. A suite that defines ``run_json()`` controls its
+own payload (e.g. control_plane embeds its before/after scaling sweep);
+otherwise the CSV rows are serialized.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
@@ -16,18 +25,47 @@ SUITES = ("control_plane", "collective_locality", "roofline_bench",
           "kernels_bench", "train_throughput")
 
 
+def _rows_to_json(rows) -> dict:
+    out = []
+    for row in rows:
+        n, v, d = (tuple(row) + ("",))[:3]
+        out.append({"name": n, "us_per_call": v, "derived": d})
+    return {"rows": out}
+
+
 def main() -> int:
-    picked = sys.argv[1:] or SUITES
+    argv = sys.argv[1:]
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
+    out_dir = "."
+    if "--out-dir" in argv:
+        i = argv.index("--out-dir")
+        if i + 1 >= len(argv):
+            print("usage: --out-dir requires a directory argument",
+                  file=sys.stderr)
+            return 2
+        out_dir = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    picked = argv or SUITES
     failed = 0
     print("name,us_per_call,derived")
     for name in picked:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row in mod.run():
-                n, v, d = (row + ("",))[:3] if len(row) < 3 else row[:3]
+            rows = mod.run()
+            for row in rows:
+                n, v, d = (tuple(row) + ("",))[:3]
                 d = f"{d:.4g}" if isinstance(d, float) else d
                 v = f"{v:.4g}" if isinstance(v, float) else v
                 print(f"{name}.{n},{v},{d}", flush=True)
+            if as_json:
+                payload = (mod.run_json() if hasattr(mod, "run_json")
+                           else _rows_to_json(rows))
+                payload = {"suite": name, **payload}
+                path = os.path.join(out_dir, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2)
+                print(f"# wrote {path}", flush=True)
         except Exception:                    # noqa: BLE001
             failed += 1
             print(f"{name},ERROR,", flush=True)

@@ -12,12 +12,33 @@ the dead cluster's jobs to healthy clusters — resuming from the job's last
 committed checkpoint manifest (recorded under /checkpoints/<job>). Straggler
 mitigation compares per-job step rates against the fleet median and re-dispatches
 (or backup-dispatches) jobs that fall below a configurable fraction of it.
+
+Hot path (the scaling overhaul): the dispatcher no longer issues overwatch
+range scans per operation. It subscribes to ``/clusters/``, ``/telemetry/``
+and ``/jobs/`` watch events and maintains materialized views:
+
+  * ``_clusters`` / ``_telemetry`` — registration + telemetry directories,
+    incrementally invalidated (``clusters()``/``telemetry()`` are now O(n)
+    dict copies with zero store round-trips);
+  * ``_load_order`` — a (load, cluster) sorted candidate structure, so
+    ``pick()`` finds the least-loaded eligible clusters without re-reading
+    telemetry;
+  * ``_caps_index`` — capability -> clusters, so ``candidates()`` intersects
+    small sets instead of scanning every registration;
+  * ``_jobs_by_cluster`` / ``_placement`` / ``_status`` / ``_running`` —
+    placement and status views, so ``recover_cluster_jobs`` touches only the
+    dead cluster's jobs and ``check_stragglers`` only running jobs, never the
+    whole ``/jobs/`` keyspace.
+
+Every view is derived purely from watch events emitted by the (linearizable)
+overwatch, so it is exactly as consistent as the range scans it replaces.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.overwatch import OverwatchService
 from repro.core.transport import DeliveryError, Fabric
@@ -41,55 +62,182 @@ class Dispatcher:
         self.straggler_factor = straggler_factor
         self._rr = itertools.count()
         self.dispatch_log: List[tuple] = []
-        # failure detector: watch registration tombstones
-        overwatch.watch("/clusters/", self._on_cluster_event)
+        self._relays: Dict[tuple, tuple] = {}
+        # ------------------------- materialized views (watch-invalidated)
+        self._clusters: Dict[str, dict] = {}
+        self._telemetry: Dict[str, dict] = {}
+        self._cur_load: Dict[str, float] = {}
+        self._load_order: List[Tuple[float, str]] = []   # sorted (load, name)
+        self._caps_index: Dict[str, Set[str]] = {}
+        self._placement: Dict[str, dict] = {}
+        self._jobs_by_cluster: Dict[str, Set[str]] = {}
+        self._status: Dict[str, dict] = {}
+        self._running: Set[str] = set()
+        self._straggler_rules: Dict[str, RoutingRule] = {}
         self._down_callbacks: List[Callable[[str], None]] = []
+        # failure detector + view maintenance: subscribe before any
+        # registration so the views never miss an event
+        overwatch.watch("/clusters/", self._on_cluster_event)
+        overwatch.watch("/telemetry/", self._on_telemetry_event)
+        overwatch.watch("/jobs/", self._on_job_event)
+        self._seed_views()
+
+    # ----------------------------------------------------------- view maintenance
+    def _seed_views(self) -> None:
+        """Replay pre-existing state (no-op when, as usual, the dispatcher is
+        created before any cluster registers)."""
+        for key, val in self.ow.handle(
+                {"op": "range", "prefix": "/clusters/"})["items"].items():
+            self._cluster_put(key.split("/")[-1], val)
+        for key, val in self.ow.handle(
+                {"op": "range", "prefix": "/telemetry/"})["items"].items():
+            self._telemetry_put(key.split("/")[-1], val)
+        for key, val in self.ow.handle(
+                {"op": "range", "prefix": "/jobs/"})["items"].items():
+            self._job_put(key, val)
+
+    def _cluster_put(self, name: str, info: dict) -> None:
+        old = self._clusters.get(name)
+        if old is not None:
+            for cap in old.get("capabilities", ()):
+                self._caps_index.get(cap, set()).discard(name)
+        else:
+            load = self._telemetry.get(name, {}).get("load", 0.0)
+            self._cur_load[name] = load
+            bisect.insort(self._load_order, (load, name))
+        self._clusters[name] = info
+        for cap in info.get("capabilities", ()):
+            self._caps_index.setdefault(cap, set()).add(name)
+
+    def _cluster_del(self, name: str) -> None:
+        info = self._clusters.pop(name, None)
+        if info is None:
+            return
+        for cap in info.get("capabilities", ()):
+            self._caps_index.get(cap, set()).discard(name)
+        self._load_order_discard(name)
+
+    def _load_order_discard(self, name: str) -> None:
+        load = self._cur_load.pop(name, None)
+        if load is None:
+            return
+        i = bisect.bisect_left(self._load_order, (load, name))
+        if i < len(self._load_order) and self._load_order[i] == (load, name):
+            del self._load_order[i]
+
+    def _telemetry_put(self, name: str, tele: dict) -> None:
+        self._telemetry[name] = tele
+        if name in self._clusters:
+            self._load_order_discard(name)
+            load = tele.get("load", 0.0)
+            self._cur_load[name] = load
+            bisect.insort(self._load_order, (load, name))
+
+    def _on_cluster_event(self, event: str, key: str, value, rev: int) -> None:
+        cluster = key.split("/")[-1]
+        if event == "put":
+            self._cluster_put(cluster, value)
+            return
+        if event != "delete":
+            return
+        self._cluster_del(cluster)
+        for cb in self._down_callbacks:
+            cb(cluster)
+        self.recover_cluster_jobs(cluster)
+
+    def _on_telemetry_event(self, event: str, key: str, value, rev: int) -> None:
+        cluster = key.split("/")[-1]
+        if event == "put":
+            self._telemetry_put(cluster, value)
+        elif event == "delete":
+            self._telemetry.pop(cluster, None)
+            if cluster in self._clusters:
+                self._load_order_discard(cluster)
+                self._cur_load[cluster] = 0.0
+                bisect.insort(self._load_order, (0.0, cluster))
+
+    def _job_put(self, key: str, value: dict) -> None:
+        parts = key.split("/")
+        if len(parts) != 4:
+            return
+        _, _, jid, leaf = parts
+        if leaf == "placement":
+            old = self._placement.get(jid)
+            if old is not None:
+                self._jobs_by_cluster.get(old["cluster"], set()).discard(jid)
+            self._placement[jid] = value
+            self._jobs_by_cluster.setdefault(value["cluster"], set()).add(jid)
+        elif leaf == "status":
+            self._status[jid] = value
+            if value.get("status") == "running":
+                self._running.add(jid)
+            else:
+                self._running.discard(jid)
+            if value.get("status") == "done":
+                self._gc_straggler_rule(jid)
+
+    def _on_job_event(self, event: str, key: str, value, rev: int) -> None:
+        if event == "put":
+            self._job_put(key, value)
+            return
+        parts = key.split("/")
+        if len(parts) != 4:
+            return
+        _, _, jid, leaf = parts
+        if leaf == "placement":
+            old = self._placement.pop(jid, None)
+            if old is not None:
+                self._jobs_by_cluster.get(old["cluster"], set()).discard(jid)
+        elif leaf == "status":
+            self._status.pop(jid, None)
+            self._running.discard(jid)
+
+    def _gc_straggler_rule(self, jid: str) -> None:
+        """Satellite fix: straggler rules used to accumulate forever, slowing
+        ``candidates()`` for every future job. Drop the rule once the
+        re-dispatched job completes."""
+        rule = self._straggler_rules.pop(jid, None)
+        if rule is not None:
+            try:
+                self.rules.remove(rule)
+            except ValueError:
+                pass
 
     # ---------------------------------------------------------------- directories
     def clusters(self) -> Dict[str, dict]:
-        return {k.split("/")[-1]: v
-                for k, v in self.ow.handle({"op": "range",
-                                            "prefix": "/clusters/"})["items"].items()}
+        return dict(self._clusters)
 
     def telemetry(self) -> Dict[str, dict]:
-        return {k.split("/")[-1]: v
-                for k, v in self.ow.handle({"op": "range",
-                                            "prefix": "/telemetry/"})["items"].items()}
+        return dict(self._telemetry)
 
     def _agent_addr(self, cluster: str):
-        info = self.clusters()[cluster]
-        return tuple(info["agent_addr"])
+        return tuple(self._clusters[cluster]["agent_addr"])
 
     # ----------------------------------------------------------------- CRD pubsub
     def broadcast_spec(self, spec, master_state) -> None:
         """The pubsub publisher: push the CRD to every registered agent."""
-        for cluster, info in self.clusters().items():
+        for cluster in list(self._clusters):
             self._send_agent(cluster, {"kind": "configure", "spec": spec,
                                        "master_state": master_state})
 
     def _send_agent(self, cluster: str, msg: dict) -> dict:
-        addr = self._agent_addr(cluster)
+        info = self._clusters[cluster]          # one lookup, zero round-trips
+        addr = tuple(info["agent_addr"])
         if cluster == self.master:
             return self.fabric.send(self.master, "system@dispatcher",
                                     cluster, addr, msg)
-        # master -> private agent rides the agent bootstrap channel
-        from repro.core.agent import AGENT_PORT
-        from repro.core import gateways as GW
-        idx = self.clusters()[cluster]["idx"]
-        # dispatcher reaches remote agents through a dedicated relay channel
-        relay = (f"10.{idx}.0.30", AGENT_PORT)
+        # master -> private agent rides the lazily-created dispatch relay
         return self.fabric.send(self.master, "system@dispatcher", self.master,
-                                self._master_relay(cluster, idx, addr), msg)
+                                self._master_relay(cluster, info["idx"], addr),
+                                msg)
 
     def _master_relay(self, cluster: str, idx: int, agent_addr) -> tuple:
         """Lazily create the master->agent dispatch channel (initialization)."""
         key = ("dispatch-relay", cluster)
-        if not hasattr(self, "_relays"):
-            self._relays = {}
         if key not in self._relays:
             local = (f"10.200.0.{idx}", 6100)
-            ch = self.fabric.create_channel(self.master, local, cluster,
-                                            agent_addr)
+            self.fabric.create_channel(self.master, local, cluster,
+                                       agent_addr)
             self._relays[key] = local
         return self._relays[key]
 
@@ -97,24 +245,52 @@ class Dispatcher:
     def add_rule(self, rule: RoutingRule) -> None:
         self.rules.append(rule)
 
+    def _eligible(self, needs: Set[str],
+                  matched_rules: List[RoutingRule]) -> Set[str]:
+        if needs:
+            sets = [self._caps_index.get(cap, set()) for cap in needs]
+            cands = set.intersection(*sets) if sets else set(self._clusters)
+        else:
+            cands = set(self._clusters)
+        for rule in matched_rules:
+            cands &= set(rule.clusters)
+        return cands
+
     def candidates(self, job: dict) -> List[str]:
-        regs = self.clusters()
         needs = set(job.get("tags", {}).get("requires", ()))
-        cands = [c for c, info in regs.items()
-                 if needs.issubset(set(info.get("capabilities", ())))]
-        for rule in self.rules:
-            if rule.match(job):
-                cands = [c for c in cands if c in rule.clusters]
-        return sorted(cands)
+        return sorted(self._eligible(
+            needs, [r for r in self.rules if r.match(job)]))
 
     def pick(self, job: dict) -> Optional[str]:
-        cands = self.candidates(job)
+        needs = set(job.get("tags", {}).get("requires", ()))
+        matched = [r for r in self.rules if r.match(job)]
+        if not needs and not matched:
+            # unconstrained job: every cluster is eligible, so the least-loaded
+            # tie block is the contiguous, name-sorted front of _load_order —
+            # O(log n), no set materialization
+            if not self._load_order:
+                return None
+            min_load = self._load_order[0][0]
+            hi = bisect.bisect_right(self._load_order,
+                                     (min_load, "\U0010ffff"))
+            return self._load_order[next(self._rr) % hi][1]
+        cands = self._eligible(needs, matched)
         if not cands:
             return None
-        tele = self.telemetry()
-        loads = {c: tele.get(c, {}).get("load", 0.0) for c in cands}
-        m = min(loads.values())
-        best = [c for c in cands if loads[c] == m]
+        # walk the load-ordered structure: the first eligible entry carries the
+        # minimum load; ties are adjacent and already name-sorted
+        best: List[str] = []
+        best_load: Optional[float] = None
+        for load, name in self._load_order:
+            if name not in cands:
+                continue
+            if best_load is None:
+                best_load = load
+            elif load != best_load:
+                break
+            best.append(name)
+        # cands is a subset of _clusters and _load_order mirrors _clusters,
+        # so the walk always finds at least one entry
         return best[next(self._rr) % len(best)]
 
     def submit(self, job: dict) -> str:
@@ -135,28 +311,19 @@ class Dispatcher:
     def on_cluster_down(self, cb: Callable[[str], None]) -> None:
         self._down_callbacks.append(cb)
 
-    def _on_cluster_event(self, event: str, key: str, value, rev: int) -> None:
-        if event != "delete":
-            return
-        cluster = key.split("/")[-1]
-        for cb in self._down_callbacks:
-            cb(cluster)
-        self.recover_cluster_jobs(cluster)
-
     def recover_cluster_jobs(self, dead: str) -> List[str]:
         """Re-dispatch every job placed on a dead cluster from its last committed
-        checkpoint manifest."""
+        checkpoint manifest. Uses the per-cluster placement index: cost scales
+        with the dead cluster's jobs, not the whole /jobs/ keyspace."""
         moved = []
-        placements = self.ow.handle(
-            {"op": "range", "prefix": "/jobs/"})["items"]
-        for key, val in placements.items():
-            if not key.endswith("/placement") or val["cluster"] != dead:
+        for jid in sorted(self._jobs_by_cluster.get(dead, set())):
+            placement = self._placement.get(jid)
+            if placement is None:
                 continue
-            jid = key.split("/")[2]
-            status = placements.get(f"/jobs/{jid}/status")
+            status = self._status.get(jid)
             if status and status.get("status") == "done":
                 continue
-            job = dict(val["job"])
+            job = dict(placement["job"])
             ck = self.ow.handle({"op": "get",
                                  "key": f"/checkpoints/{jid}"})["value"]
             if ck:
@@ -173,12 +340,12 @@ class Dispatcher:
 
     # -------------------------------------------------------- straggler mitigation
     def check_stragglers(self) -> List[str]:
-        """Compare per-job step rates; re-dispatch jobs below factor x median."""
-        statuses = self.ow.handle({"op": "range", "prefix": "/jobs/"})["items"]
+        """Compare per-job step rates; re-dispatch jobs below factor x median.
+        Scans the running-jobs view only — no /jobs/ range round-trip."""
         rates = {}
-        for key, val in statuses.items():
-            if key.endswith("/status") and val.get("status") == "running":
-                jid = key.split("/")[2]
+        for jid in sorted(self._running):
+            val = self._status.get(jid)
+            if val is not None:
                 rates[jid] = (val.get("rate", 0.0), val["cluster"])
         if len(rates) < 2:
             return []
@@ -187,18 +354,28 @@ class Dispatcher:
         moved = []
         for jid, (rate, cluster) in rates.items():
             if median > 0 and rate < self.straggler_factor * median:
-                job_key = f"/jobs/{jid}/placement"
-                placement = self.ow.handle({"op": "get", "key": job_key})["value"]
+                placement = self._placement.get(jid)
+                if placement is None:
+                    continue
                 job = dict(placement["job"])
                 ck = self.ow.handle({"op": "get",
                                      "key": f"/checkpoints/{jid}"})["value"]
                 if ck:
                     job["restore_from"] = ck
-                # exclude the slow cluster, cancel there, re-dispatch
-                self.add_rule(RoutingRule(
+                # exclude the slow cluster, cancel there, re-dispatch; one rule
+                # per job, GC'd on completion (see _gc_straggler_rule). A job
+                # straggling again folds the new exclusion into the replacement
+                # rule instead of orphaning the old one in self.rules
+                prev = self._straggler_rules.get(jid)
+                eligible = (prev.clusters if prev is not None
+                            else list(self._clusters))
+                self._gc_straggler_rule(jid)
+                rule = RoutingRule(
                     name=f"straggler-{jid}",
                     match=lambda j, _jid=jid: j["job_id"] == _jid,
-                    clusters=[c for c in self.clusters() if c != cluster]))
+                    clusters=[c for c in eligible if c != cluster])
+                self.add_rule(rule)
+                self._straggler_rules[jid] = rule
                 try:
                     self._send_agent(cluster, {"kind": "cancel", "job_id": jid})
                     new_cluster = self.submit(job)

@@ -14,14 +14,28 @@ the failure mode the lease-based failure detector exists for.
 Leases: registration keys attach to a lease; heartbeats are keepalives. A lease
 that misses its TTL expires, its keys are deleted, and watchers (the dispatcher's
 failure detector) see the tombstones.
+
+Hot-path data structures (the scaling overhaul):
+  * ``_keys`` — a sorted list of live keys maintained with ``bisect``, so
+    ``range(prefix)`` is O(log n + |result|) instead of sorting the whole
+    keyspace per call;
+  * watch buckets — watchers are indexed by the first path segment of their
+    prefix, so a mutation only consults the watchers that could possibly match
+    instead of scanning every registration;
+  * ``_expiry_heap`` — a lazy-deletion min-heap of (expires_at, lease_id), so
+    the per-``handle()`` lease sweep is O(1) when nothing is due instead of
+    O(#leases).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import itertools
+from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.transport import Address, Fabric
+from repro.core.transport import Address, Fabric, RingLog
 
 OVERWATCH_PORT = 7000
 OVERWATCH_IP = "10.0.0.2"
@@ -35,26 +49,47 @@ class Lease:
     keys: set
 
 
+def _first_segment(path: str) -> Optional[str]:
+    """``/clusters/onprem-a`` -> ``clusters``; None when there is no full
+    leading segment (e.g. ``""`` or ``"/clu"``) and the watcher must stay in
+    the catch-all bucket."""
+    if not path.startswith("/"):
+        return None
+    end = path.find("/", 1)
+    if end < 0:
+        return None
+    return path[1:end]
+
+
 class OverwatchService:
     """The store itself (runs on the master cluster)."""
 
     def __init__(self, fabric: Fabric, cluster: str,
-                 addr: Address = (OVERWATCH_IP, OVERWATCH_PORT)):
+                 addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
+                 op_log_limit: Optional[int] = None):
         self.fabric = fabric
         self.cluster = cluster
         self.addr = addr
         self._kv: Dict[str, Tuple[Any, int]] = {}
+        self._keys: List[str] = []           # sorted index over _kv
         self._rev = 0
-        self.op_log: List[tuple] = []
+        self.op_log: RingLog = RingLog(op_log_limit)
+        self.op_counts: Counter = Counter()  # every handled op, reads included
         self._leases: Dict[int, Lease] = {}
         self._lease_ids = itertools.count(1)
-        self._watches: List[Tuple[str, Callable]] = []
+        self._expiry_heap: List[Tuple[float, int]] = []
+        # watch registrations: seq preserves global callback ordering across
+        # buckets, buckets bound how many registrations a mutation consults
+        self._watch_seq = itertools.count()
+        self._watch_buckets: Dict[str, List[Tuple[int, str, Callable]]] = {}
+        self._watch_catchall: List[Tuple[int, str, Callable]] = []
         fabric.register_handler(cluster, addr, self.handle)
 
     # ----------------------------------------------------------------------- plumbing
     def handle(self, req: dict) -> dict:
         self._sweep_leases()
         op = req["op"]
+        self.op_counts[op] += 1
         fn = getattr(self, "_op_" + op, None)
         if fn is None:
             return {"ok": False, "error": f"unknown op {op}"}
@@ -68,27 +103,47 @@ class OverwatchService:
         self.op_log.append((self._rev, op, key, value))
         return self._rev
 
+    def _index_add(self, key: str) -> None:
+        i = bisect.bisect_left(self._keys, key)
+        if i == len(self._keys) or self._keys[i] != key:
+            self._keys.insert(i, key)
+
+    def _index_discard(self, key: str) -> None:
+        i = bisect.bisect_left(self._keys, key)
+        if i < len(self._keys) and self._keys[i] == key:
+            del self._keys[i]
+
     def _notify(self, event: str, key: str, value: Any, rev: int) -> None:
-        for prefix, cb in self._watches:
-            if key.startswith(prefix):
-                cb(event, key, value, rev)
+        seg = _first_segment(key)
+        matched = [w for w in self._watch_catchall if key.startswith(w[1])]
+        if seg is not None:
+            matched += [w for w in self._watch_buckets.get(seg, ())
+                        if key.startswith(w[1])]
+        matched.sort(key=lambda w: w[0])     # registration order, as before
+        for _, _, cb in matched:
+            cb(event, key, value, rev)
 
     def _sweep_leases(self) -> None:
         # _notify callbacks can re-enter handle() -> _sweep_leases(); pop each
         # expired lease BEFORE notifying so reentrant sweeps never double-free.
         if getattr(self, "_sweeping", False):
             return
+        now = self.fabric.clock
+        heap = self._expiry_heap
+        if not heap or heap[0][0] > now:
+            return
         self._sweeping = True
         try:
-            now = self.fabric.clock
-            for lid in list(self._leases):
+            while heap and heap[0][0] <= now:
+                expires_at, lid = heapq.heappop(heap)
                 lease = self._leases.get(lid)
-                if lease is None or lease.expires_at > now:
-                    continue
+                if lease is None or lease.expires_at != expires_at:
+                    continue                 # stale entry (keepalive or gone)
                 del self._leases[lid]
                 for key in sorted(lease.keys):
                     if key in self._kv:
                         del self._kv[key]
+                        self._index_discard(key)
                         rev = self._bump("expire", key)
                         self._notify("delete", key, None, rev)
         finally:
@@ -98,6 +153,8 @@ class OverwatchService:
     def _op_put(self, req: dict) -> dict:
         key, value = req["key"], req["value"]
         rev = self._bump("put", key, value)
+        if key not in self._kv:
+            self._index_add(key)
         self._kv[key] = (value, rev)
         if "lease" in req and req["lease"]:
             lease = self._leases.get(req["lease"])
@@ -117,6 +174,7 @@ class OverwatchService:
         key = req["key"]
         if key in self._kv:
             del self._kv[key]
+            self._index_discard(key)
             rev = self._bump("delete", key)
             self._notify("delete", key, None, rev)
             return {"ok": True, "revision": rev}
@@ -130,20 +188,29 @@ class OverwatchService:
         if cur != expect:
             return {"ok": True, "swapped": False, "revision": cur}
         rev = self._bump("cas", key, req["value"])
+        if key not in self._kv:
+            self._index_add(key)
         self._kv[key] = (req["value"], rev)
         self._notify("put", key, req["value"], rev)
         return {"ok": True, "swapped": True, "revision": rev}
 
     def _op_range(self, req: dict) -> dict:
         prefix = req["prefix"]
-        items = {k: v for k, (v, _) in sorted(self._kv.items())
-                 if k.startswith(prefix)}
+        lo = bisect.bisect_left(self._keys, prefix)
+        if prefix:
+            hi = bisect.bisect_left(self._keys, prefix[:-1] +
+                                    chr(ord(prefix[-1]) + 1), lo)
+        else:
+            hi = len(self._keys)
+        items = {k: self._kv[k][0] for k in self._keys[lo:hi]}
         return {"ok": True, "items": items}
 
     def _op_lease_grant(self, req: dict) -> dict:
         lid = next(self._lease_ids)
         ttl = float(req["ttl"])
-        self._leases[lid] = Lease(lid, ttl, self.fabric.clock + ttl, set())
+        expires = self.fabric.clock + ttl
+        self._leases[lid] = Lease(lid, ttl, expires, set())
+        heapq.heappush(self._expiry_heap, (expires, lid))
         return {"ok": True, "lease": lid}
 
     def _op_lease_keepalive(self, req: dict) -> dict:
@@ -151,12 +218,20 @@ class OverwatchService:
         if lease is None:
             return {"ok": False, "error": "lease expired or unknown"}
         lease.expires_at = self.fabric.clock + lease.ttl
+        heapq.heappush(self._expiry_heap, (lease.expires_at, lease.lease_id))
         return {"ok": True}
 
     # ------------------------------------------------------------- local-side watches
     def watch(self, prefix: str, cb: Callable[[str, str, Any, int], None]) -> None:
         """Master-side components (dispatcher) subscribe to key events."""
-        self._watches.append((prefix, cb))
+        entry = (next(self._watch_seq), prefix, cb)
+        seg = _first_segment(prefix)
+        if seg is not None:
+            # any key matching this prefix must start with "/<seg>/", so the
+            # bucket lookup is exhaustive for it
+            self._watch_buckets.setdefault(seg, []).append(entry)
+        else:
+            self._watch_catchall.append(entry)
 
     def sweep(self) -> None:
         self._sweep_leases()

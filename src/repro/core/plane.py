@@ -56,12 +56,15 @@ class SimLocalPlane:
 
 
 class ManagementPlane:
-    def __init__(self, master: str = "master"):
-        self.fabric = Fabric()
+    def __init__(self, master: str = "master",
+                 message_log_limit: Optional[int] = 100_000,
+                 op_log_limit: Optional[int] = None):
+        self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
         self._idx = itertools.count(1)
         self.agents: Dict[str, ControlAgent] = {}
-        self.overwatch = OverwatchService(self.fabric, master)
+        self.overwatch = OverwatchService(self.fabric, master,
+                                          op_log_limit=op_log_limit)
         self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
         self.spec: Optional[AppSpec] = None
         self._job_ids = itertools.count(1)

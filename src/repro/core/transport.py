@@ -20,15 +20,51 @@ cluster, kill a channel) drives the fault-tolerance tests.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
-from collections import Counter, defaultdict
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections import Counter, deque
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 Address = Tuple[str, int]            # (ip, port)
 
 
 class DeliveryError(Exception):
     """Raised when the fabric cannot deliver a message (no route / denied / down)."""
+
+
+class RingLog:
+    """Bounded append-only log (list-compatible for the common read patterns).
+
+    ``limit=None`` keeps everything (test/debug); a finite limit turns it into
+    a ring buffer so long-running planes do not grow without bound.
+    ``total_appended`` keeps counting even after old entries are evicted.
+    """
+
+    def __init__(self, limit: Optional[int] = None):
+        self.limit = limit
+        self._buf: deque = deque(maxlen=limit)
+        self.total_appended = 0
+
+    def append(self, item: Any) -> None:
+        self._buf.append(item)
+        self.total_appended += 1
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._buf)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._buf)[idx]
+        return self._buf[idx]
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+    def clear(self) -> None:
+        self._buf.clear()
 
 
 @dataclasses.dataclass
@@ -51,14 +87,41 @@ class Channel:
         return None
 
 
+# Control-plane traffic is dominated by a small vocabulary of repeated strings
+# (op names, key prefixes, field names) and fixed dict envelopes, so byte
+# accounting memoizes per-string encoded sizes and per-envelope key overhead.
+_STR_BYTES_CACHE: Dict[str, int] = {}
+_DICT_KEYS_CACHE: Dict[Tuple[str, ...], int] = {}
+_CACHE_LIMIT = 65536
+
+
+def _str_bytes(s: str) -> int:
+    n = _STR_BYTES_CACHE.get(s)
+    if n is None:
+        n = len(s.encode())
+        if len(_STR_BYTES_CACHE) >= _CACHE_LIMIT:
+            _STR_BYTES_CACHE.clear()
+        _STR_BYTES_CACHE[s] = n
+    return n
+
+
 def _payload_bytes(payload: Any) -> int:
     if isinstance(payload, (bytes, bytearray)):
         return len(payload)
     if isinstance(payload, str):
-        return len(payload.encode())
+        return _str_bytes(payload)
     if isinstance(payload, dict):
-        return sum(_payload_bytes(k) + _payload_bytes(v)
-                   for k, v in payload.items())
+        try:
+            sig = tuple(payload.keys())
+            key_bytes = _DICT_KEYS_CACHE.get(sig)
+            if key_bytes is None:
+                key_bytes = sum(_payload_bytes(k) for k in sig)
+                if len(_DICT_KEYS_CACHE) >= _CACHE_LIMIT:
+                    _DICT_KEYS_CACHE.clear()
+                _DICT_KEYS_CACHE[sig] = key_bytes
+        except TypeError:                 # unhashable keys: no memoization
+            key_bytes = sum(_payload_bytes(k) for k in payload)
+        return key_bytes + sum(_payload_bytes(v) for v in payload.values())
     if isinstance(payload, (list, tuple)):
         return sum(_payload_bytes(v) for v in payload)
     if isinstance(payload, (int, float, bool)) or payload is None:
@@ -69,7 +132,7 @@ def _payload_bytes(payload: Any) -> int:
 class Fabric:
     """The hybrid-cloud network: clusters, gateways, channels, ACLs, a clock."""
 
-    def __init__(self):
+    def __init__(self, message_log_limit: Optional[int] = 100_000):
         self.clock: float = 0.0
         self._handlers: Dict[Tuple[str, Address], Callable] = {}
         self._forwards: Dict[Tuple[str, Address], Address] = {}
@@ -80,8 +143,9 @@ class Fabric:
         self._acl: Dict[str, "AclTable"] = {}
         self.local_bytes: Counter = Counter()    # per-cluster intra bytes
         self.cross_bytes: Counter = Counter()    # per (src, dst) cluster pair
-        self.message_log: list = []
-        self._timers: list = []                  # (deadline, callback) heap-ish
+        self.message_log: RingLog = RingLog(message_log_limit)
+        self._timers: List[Tuple[float, int, Callable]] = []   # real min-heap
+        self._timer_seq = itertools.count()      # FIFO tie-break at one deadline
 
     # ------------------------------------------------------------------- topology
     def register_handler(self, cluster: str, addr: Address,
@@ -123,13 +187,17 @@ class Fabric:
     # ------------------------------------------------------------------------ time
     def tick(self, dt: float = 1.0) -> None:
         self.clock += dt
-        due = [t for t in self._timers if t[0] <= self.clock]
-        self._timers = [t for t in self._timers if t[0] > self.clock]
-        for _, cb in sorted(due, key=lambda t: t[0]):
+        # snapshot the due set BEFORE running callbacks: timers scheduled while
+        # firing (heartbeat re-arm) wait for the next tick, as they always did
+        due = []
+        while self._timers and self._timers[0][0] <= self.clock:
+            due.append(heapq.heappop(self._timers))
+        for _, _, cb in due:
             cb()
 
     def call_later(self, delay: float, cb: Callable[[], None]) -> None:
-        self._timers.append((self.clock + delay, cb))
+        heapq.heappush(self._timers,
+                       (self.clock + delay, next(self._timer_seq), cb))
 
     # -------------------------------------------------------------------- delivery
     def send(self, src_cluster: str, src_id: str, cluster: str, addr: Address,

@@ -7,10 +7,17 @@ compliance-constrained tasks (e.g. "onprem-only ETL") are only visible to
 workers inside the right partition. Failed tasks are retried up to
 ``Task.retries`` times; tasks downstream of a permanently failed task are
 marked upstream_failed.
+
+Hot path (the scaling overhaul): instead of pulling the full ``dag_state`` for
+every DAG on every tick, the scheduler keeps a cached per-DAG state and asks
+the taskdb only for the *delta* since its cursor (``dag_delta``). A DAG whose
+tasks did not change and which scheduled nothing last pass is quiescent and
+costs a single O(1) delta probe per tick — event-driven scheduling rather than
+polling.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Set
 
 from repro.pipelines.dag import DAG, Task
 from repro.pipelines.services import ServiceClient
@@ -27,44 +34,66 @@ class Scheduler:
         self.client = client
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
+        self._state: Dict[str, Dict[str, dict]] = {}   # cached latest rows
+        self._cursor: Dict[str, int] = {}
+        self._quiescent: Set[str] = set()
 
     def add_dag(self, dag: DAG) -> None:
         self.dags[dag.dag_id] = dag
+        self._state.setdefault(dag.dag_id, {})
+        self._cursor.setdefault(dag.dag_id, 0)
+        self._quiescent.discard(dag.dag_id)
 
     # -------------------------------------------------------------------- one tick
     def tick(self) -> List[str]:
         scheduled = []
         for dag in self.dags.values():
-            state = self.client.call("taskdb", {"op": "dag_state",
-                                                "dag": dag.dag_id})["tasks"]
-            done = {t for t, r in state.items() if r.get("status") == "success"}
-            running = {t for t, r in state.items()
-                       if r.get("status") in ("queued", "running")}
-            failed = set()
-            for t, r in state.items():
-                if r.get("status") == "failed":
-                    task = dag.tasks[t]
-                    if r["try"] < task.retries + 1:
-                        self._enqueue(dag, task, r["try"] + 1)
-                        running.add(t)
-                        scheduled.append(f"{dag.dag_id}.{t}#retry{r['try']+1}")
-                    else:
-                        failed.add(t)
-                elif r.get("status") == "upstream_failed":
-                    failed.add(t)
-            # propagate permanent failure downstream
-            for t in sorted(failed):
-                for d in dag.downstream_of(t):
-                    if d not in done and d not in failed:
-                        self.client.call("taskdb", {
-                            "op": "upsert", "dag": dag.dag_id, "task": d,
-                            "try": 1, "status": "upstream_failed",
-                            "clock": self.clock_fn()})
-                        failed.add(d)
-            for task in dag.ready_tasks(done, running, failed):
-                self._enqueue(dag, task, 1)
-                scheduled.append(f"{dag.dag_id}.{task.name}")
+            resp = self.client.call("taskdb", {
+                "op": "dag_delta", "dag": dag.dag_id,
+                "since": self._cursor.get(dag.dag_id, 0)})
+            changed = resp["tasks"]
+            self._cursor[dag.dag_id] = resp["cursor"]
+            state = self._state.setdefault(dag.dag_id, {})
+            state.update(changed)
+            if not changed and dag.dag_id in self._quiescent:
+                continue                      # nothing moved, frontier unchanged
+            n_before = len(scheduled)
+            self._schedule_dag(dag, state, scheduled)
+            if len(scheduled) == n_before:
+                self._quiescent.add(dag.dag_id)
+            else:
+                self._quiescent.discard(dag.dag_id)
         return scheduled
+
+    def _schedule_dag(self, dag: DAG, state: Dict[str, dict],
+                      scheduled: List[str]) -> None:
+        done = {t for t, r in state.items() if r.get("status") == "success"}
+        running = {t for t, r in state.items()
+                   if r.get("status") in ("queued", "running")}
+        failed = set()
+        for t, r in state.items():
+            if r.get("status") == "failed":
+                task = dag.tasks[t]
+                if r["try"] < task.retries + 1:
+                    self._enqueue(dag, task, r["try"] + 1)
+                    running.add(t)
+                    scheduled.append(f"{dag.dag_id}.{t}#retry{r['try']+1}")
+                else:
+                    failed.add(t)
+            elif r.get("status") == "upstream_failed":
+                failed.add(t)
+        # propagate permanent failure downstream
+        for t in sorted(failed):
+            for d in dag.downstream_of(t):
+                if d not in done and d not in failed:
+                    self.client.call("taskdb", {
+                        "op": "upsert", "dag": dag.dag_id, "task": d,
+                        "try": 1, "status": "upstream_failed",
+                        "clock": self.clock_fn()})
+                    failed.add(d)
+        for task in dag.ready_tasks(done, running, failed):
+            self._enqueue(dag, task, 1)
+            scheduled.append(f"{dag.dag_id}.{task.name}")
 
     def _enqueue(self, dag: DAG, task: Task, try_n: int) -> None:
         self.client.call("taskdb", {"op": "upsert", "dag": dag.dag_id,

@@ -4,10 +4,19 @@ Hosted on the master partition; workers commit every finished task here (the
 paper: "commit each finished task to an SQL database"). Rows are keyed
 (dag_id, task, try_number) with status transitions
 queued -> running -> success | failed.
+
+Hot path (the scaling overhaul): the DB maintains a per-DAG latest-try view
+and a per-DAG change log, so
+
+  * ``dag_state`` / ``latest`` no longer scan every row in the table;
+  * the new ``dag_delta`` op gives the scheduler incremental dirty-task
+    deltas — rows changed since a cursor — so a quiescent DAG costs O(1)
+    per scheduler tick instead of a full state dump.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import bisect
+from typing import Dict, List, Tuple
 
 
 class TaskDB:
@@ -15,6 +24,23 @@ class TaskDB:
 
     def __init__(self):
         self.rows: Dict[tuple, dict] = {}
+        # dag -> task -> latest-try row (same row objects as self.rows)
+        self._latest: Dict[str, Dict[str, dict]] = {}
+        self._seq = 0
+        # dag -> append-only [(seq, task)] change log, compacted when it
+        # outgrows the task count (bounded memory, cursor-stable)
+        self._changes: Dict[str, List[Tuple[int, str]]] = {}
+
+    def _mark_dirty(self, dag: str, task: str) -> None:
+        self._seq += 1
+        log = self._changes.setdefault(dag, [])
+        log.append((self._seq, task))
+        tasks = self._latest.get(dag, {})
+        if len(log) > 4 * max(len(tasks), 8):
+            last: Dict[str, int] = {}
+            for seq, t in log:
+                last[t] = seq
+            log[:] = sorted((s, t) for t, s in last.items())
 
     # ---------------------------------------------------------------- service API
     def handle(self, msg: dict) -> dict:
@@ -27,22 +53,32 @@ class TaskDB:
             for k in ("status", "worker", "result", "clock", "error"):
                 if k in msg:
                     row[k] = msg[k]
+            latest = self._latest.setdefault(msg["dag"], {})
+            cur = latest.get(msg["task"])
+            if cur is None or key[2] >= cur["try"]:
+                latest[msg["task"]] = row
+            self._mark_dirty(msg["dag"], msg["task"])
             return {"ok": True}
         if op == "get":
             key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
             return {"ok": True, "row": self.rows.get(key)}
         if op == "latest":
-            rows = [r for (d, t, _), r in self.rows.items()
-                    if d == msg["dag"] and t == msg["task"]]
-            rows.sort(key=lambda r: r["try"])
-            return {"ok": True, "row": rows[-1] if rows else None}
+            row = self._latest.get(msg["dag"], {}).get(msg["task"])
+            return {"ok": True, "row": row}
         if op == "dag_state":
-            out = {}
-            for (d, t, n), r in self.rows.items():
-                if d != msg["dag"]:
-                    continue
-                cur = out.get(t)
-                if cur is None or n > cur["try"]:
-                    out[t] = r
-            return {"ok": True, "tasks": out}
+            return {"ok": True,
+                    "tasks": dict(self._latest.get(msg["dag"], {}))}
+        if op == "dag_delta":
+            return self._dag_delta(msg["dag"], int(msg.get("since", 0)))
         return {"ok": False, "error": f"unknown op {op}"}
+
+    def _dag_delta(self, dag: str, since: int) -> dict:
+        """Latest rows for tasks changed after cursor ``since``."""
+        log = self._changes.get(dag, [])
+        i = bisect.bisect_left(log, (since + 1,))
+        latest = self._latest.get(dag, {})
+        tasks = {}
+        for _, t in log[i:]:
+            if t not in tasks and t in latest:
+                tasks[t] = latest[t]
+        return {"ok": True, "tasks": tasks, "cursor": self._seq}

@@ -1,0 +1,258 @@
+"""Hot-path complexity guarantees of the control-plane overhaul.
+
+These tests pin the *shape* of the cost, not wall-time: a dispatch must issue a
+constant number of overwatch ops no matter how many jobs already exist, range
+scans must come off the prefix index, watches must be bucket-routed, lease
+sweeps heap-driven, and quiescent DAGs must cost a single delta probe per tick.
+"""
+from collections import Counter
+
+import pytest
+
+from repro.core.plane import ManagementPlane
+from repro.core.transport import Fabric, RingLog
+from repro.pipelines.dag import DAG, Task
+from repro.pipelines.scheduler import Scheduler
+from repro.pipelines.taskdb import TaskDB
+from tests.conftest import make_plane
+
+
+def _preload_jobs(plane: ManagementPlane, n: int, cluster: str) -> None:
+    for j in range(n):
+        plane.overwatch.handle(
+            {"op": "put", "key": f"/jobs/pre-{j}/placement",
+             "value": {"cluster": cluster,
+                       "job": {"job_id": f"pre-{j}", "kind": "sim",
+                               "steps": 10, "tags": {}, "payload": {}},
+                       "clock": 0.0}})
+        plane.overwatch.handle(
+            {"op": "put", "key": f"/jobs/pre-{j}/status",
+             "value": {"cluster": cluster, "status": "running",
+                       "progress": 1.0, "rate": 1.0, "clock": 0.0}})
+
+
+def _submit_op_delta(plane: ManagementPlane, job_id: str) -> Counter:
+    before = Counter(plane.overwatch.op_counts)
+    plane.submit_job("sim", steps=1, job_id=job_id)
+    return Counter(plane.overwatch.op_counts) - before
+
+
+def test_submit_overwatch_ops_independent_of_job_count():
+    """A single submit() performs O(1) overwatch ops — in particular zero range
+    scans — regardless of how many jobs already exist in the keyspace."""
+    plane = make_plane(2)
+    delta_small = _submit_op_delta(plane, "first")
+    _preload_jobs(plane, 400, "onprem-0")
+    delta_large = _submit_op_delta(plane, "second")
+    assert delta_small == delta_large          # same op profile at 1x and 400x
+    assert delta_large["range"] == 0           # dispatcher views, not scans
+    assert sum(delta_large.values()) <= 5      # a small constant
+
+
+def test_range_prefix_index_correctness(plane):
+    ow = plane.agents["onprem-a"].ow
+    ow.put("/a", 0)
+    ow.put("/a/x", 1)
+    ow.put("/a/y", 2)
+    ow.put("/ab", 3)
+    ow.put("/b/z", 4)
+    assert ow.range("/a/") == {"/a/x": 1, "/a/y": 2}
+    assert list(ow.range("/a")) == ["/a", "/a/x", "/a/y", "/ab"]  # sorted
+    ow.delete("/a/x")
+    assert ow.range("/a/") == {"/a/y": 2}
+    # empty prefix = full keyspace (clusters/telemetry keys included)
+    full = plane.overwatch.handle({"op": "range", "prefix": ""})["items"]
+    assert "/a/y" in full and "/clusters/onprem-a" in full
+
+
+def test_watch_bucket_routing_and_order(plane):
+    events = []
+    ow = plane.overwatch
+    ow.watch("", lambda e, k, v, r: events.append(("all", k)))
+    ow.watch("/x/", lambda e, k, v, r: events.append(("x", k)))
+    ow.watch("/y/", lambda e, k, v, r: events.append(("y", k)))
+    ow.handle({"op": "put", "key": "/x/k", "value": 1})
+    assert events == [("all", "/x/k"), ("x", "/x/k")]  # registration order
+    events.clear()
+    ow.handle({"op": "put", "key": "/y/k", "value": 2})
+    assert events == [("all", "/y/k"), ("y", "/y/k")]  # /x/ watcher skipped
+
+
+def test_lease_heap_with_keepalives():
+    plane = make_plane(1)
+    ow = plane.agents["onprem-0"].ow
+    lease = ow.lease_grant(ttl=2.0)
+    ow.put("/svc/a", 1, lease=lease)
+    for _ in range(5):                       # stale heap entries accumulate
+        plane.tick()
+        ow.lease_keepalive(lease)
+    assert ow.get("/svc/a") == 1             # keepalive honored
+    plane.tick(n=5)                          # now let it lapse
+    assert ow.get("/svc/a") is None
+
+
+def test_ring_log_bounds_memory():
+    log = RingLog(limit=3)
+    for i in range(10):
+        log.append(i)
+    assert list(log) == [7, 8, 9]
+    assert len(log) == 3 and log.total_appended == 10
+    assert log[-1] == 9 and log[-2:] == [8, 9]
+    unbounded = RingLog(None)
+    for i in range(10):
+        unbounded.append(i)
+    assert len(unbounded) == 10
+
+    fabric = Fabric(message_log_limit=5)
+    fabric.register_handler("c", ("ip", 1), lambda p: {"ok": True})
+    for _ in range(20):
+        fabric.send("c", "pod", "c", ("ip", 1), {"x": 1})
+    assert len(fabric.message_log) == 5
+    assert fabric.message_log.total_appended == 20
+
+
+def test_timer_heap_ordering_and_rearm():
+    fabric = Fabric()
+    fired = []
+    fabric.call_later(2.0, lambda: fired.append("b"))
+    fabric.call_later(1.0, lambda: fired.append("a"))
+    fabric.call_later(2.0, lambda: fired.append("c"))
+    # a timer re-armed during a tick waits for the next tick
+    fabric.call_later(1.0, lambda: fabric.call_later(0.0,
+                                                     lambda: fired.append("d")))
+    fabric.tick(2.0)
+    assert fired == ["a", "b", "c"]          # deadline order, FIFO on ties
+    fabric.tick(1.0)
+    assert fired == ["a", "b", "c", "d"]
+
+
+def test_straggler_rule_garbage_collected():
+    plane = make_plane(3, rates={0: 1.0, 1: 1.0, 2: 0.01})
+    pinning = {"on": True}
+    for i in range(3):
+        plane.add_routing_rule(__import__(
+            "repro.core.dispatcher", fromlist=["RoutingRule"]).RoutingRule(
+            name=f"pin-j{i}",
+            match=lambda j, _i=i: pinning["on"] and j["job_id"] == f"j{_i}",
+            clusters=[f"onprem-{i}"]))
+    jids = [plane.submit_job("sim", steps=6, job_id=f"j{i}",
+                             tags={"requires": ("cpu",)}) for i in range(3)]
+    pinning["on"] = False
+    plane.tick(n=3)
+    moved = plane.dispatcher.check_stragglers()
+    assert moved
+    assert any(r.name.startswith("straggler-") for r in plane.dispatcher.rules)
+    assert plane.run_until_done(jids, max_ticks=60)
+    # the mitigated job completed -> its routing rule must be gone
+    assert not any(r.name.startswith("straggler-")
+                   for r in plane.dispatcher.rules)
+
+
+def test_straggler_rule_replaced_when_job_straggles_again():
+    """A job that straggles twice must end with zero rules once done — the
+    first straggle's rule is replaced, not orphaned."""
+    plane = make_plane(4, rates={0: 1.0, 1: 0.01, 2: 0.01, 3: 1.0})
+    pinning = {"on": True}
+    from repro.core.dispatcher import RoutingRule
+    pins = {"jf0": "onprem-0", "jf1": "onprem-3", "js": "onprem-1"}
+    for jid, cl in pins.items():
+        plane.add_routing_rule(RoutingRule(
+            name=f"pin-{jid}",
+            match=lambda j, _jid=jid: pinning["on"] and j["job_id"] == _jid,
+            clusters=[cl]))
+    jids = [plane.submit_job("sim", steps=8, job_id=j,
+                             tags={"requires": ("cpu",)}) for j in pins]
+    pinning["on"] = False
+    plane.tick(n=2)
+    moved1 = plane.dispatcher.check_stragglers()
+    assert any(m.startswith("js:onprem-1->") for m in moved1)
+    # least-loaded re-dispatch lands on the idle (also slow) onprem-2
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/jobs/js/placement"})["value"]["cluster"] == "onprem-2"
+    plane.tick(n=2)
+    moved2 = plane.dispatcher.check_stragglers()
+    assert any(m.startswith("js:onprem-2->") for m in moved2)
+    straggler_rules = [r for r in plane.dispatcher.rules
+                       if r.name.startswith("straggler-")]
+    assert len(straggler_rules) == 1          # replaced, not accumulated
+    # ...and the replacement carries both exclusions forward
+    assert set(straggler_rules[0].clusters).isdisjoint(
+        {"onprem-1", "onprem-2"})
+    assert plane.run_until_done(jids, max_ticks=80)
+    assert not any(r.name.startswith("straggler-")
+                   for r in plane.dispatcher.rules)
+
+
+def test_taskdb_dag_delta_cursor():
+    db = TaskDB()
+    r = db.handle({"op": "dag_delta", "dag": "d", "since": 0})
+    assert r["tasks"] == {}
+    db.handle({"op": "upsert", "dag": "d", "task": "a", "try": 1,
+               "status": "queued", "clock": 0.0})
+    db.handle({"op": "upsert", "dag": "d", "task": "b", "try": 1,
+               "status": "queued", "clock": 0.0})
+    r1 = db.handle({"op": "dag_delta", "dag": "d", "since": r["cursor"]})
+    assert set(r1["tasks"]) == {"a", "b"}
+    # no changes since cursor -> empty delta
+    r2 = db.handle({"op": "dag_delta", "dag": "d", "since": r1["cursor"]})
+    assert r2["tasks"] == {}
+    db.handle({"op": "upsert", "dag": "d", "task": "a", "try": 2,
+               "status": "failed", "clock": 1.0})
+    r3 = db.handle({"op": "dag_delta", "dag": "d", "since": r2["cursor"]})
+    assert set(r3["tasks"]) == {"a"} and r3["tasks"]["a"]["try"] == 2
+    # delta view agrees with the full dag_state view
+    state = db.handle({"op": "dag_state", "dag": "d"})["tasks"]
+    assert state["a"]["try"] == 2 and state["b"]["status"] == "queued"
+
+
+def test_taskdb_changelog_compacts():
+    db = TaskDB()
+    for i in range(500):
+        db.handle({"op": "upsert", "dag": "d", "task": "only", "try": 1,
+                   "status": "running", "clock": float(i)})
+    assert len(db._changes["d"]) < 100       # compacted, not 500 entries
+    r = db.handle({"op": "dag_delta", "dag": "d", "since": 0})
+    assert set(r["tasks"]) == {"only"}
+
+
+class _CountingClient:
+    def __init__(self, taskdb):
+        self.taskdb = taskdb
+        self.calls = Counter()
+
+    def call(self, service, msg):
+        self.calls[service] += 1
+        if service == "taskdb":
+            return self.taskdb.handle(msg)
+        return {"ok": True}                  # broker stub
+
+
+def test_scheduler_quiescent_dag_is_one_probe_per_tick():
+    db = TaskDB()
+    client = _CountingClient(db)
+    sched = Scheduler(client)
+    sched.add_dag(DAG("d", [Task("a"), Task("b", upstream=("a",))]))
+    sched.tick()                             # schedules root "a"
+    sched.tick()                             # sees own queued row, settles
+    for t in ("a", "b"):                     # complete everything out of band
+        db.handle({"op": "upsert", "dag": "d", "task": t, "try": 1,
+                   "status": "success", "clock": 0.0})
+    sched.tick()                             # drains the success delta ("b" ran)
+    sched.tick()
+    client.calls.clear()
+    for _ in range(10):
+        sched.tick()
+    assert client.calls == Counter({"taskdb": 10})  # one delta probe per tick
+
+
+def test_dispatcher_views_track_cluster_lifecycle(plane):
+    d = plane.dispatcher
+    assert set(d.clusters()) == {"master", "onprem-a", "onprem-b"}
+    plane.fabric.partition_cluster("onprem-b")
+    plane.tick(n=8)                          # lease expires -> tombstone
+    assert "onprem-b" not in d.clusters()
+    assert all(name != "onprem-b" for _, name in d._load_order)
+    jid = plane.submit_job("sim", steps=5)
+    placed = plane.overwatch.handle(
+        {"op": "get", "key": f"/jobs/{jid}/placement"})["value"]
+    assert placed["cluster"] != "onprem-b"

@@ -6,7 +6,9 @@ random Pod-Service graphs and partitions:
   every pod with f[p,s]=0 is denied — regardless of where s lives.
 """
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.plane import ManagementPlane
 from repro.core.service_graph import AppSpec, Pod, Service

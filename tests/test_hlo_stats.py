@@ -91,5 +91,8 @@ def test_live_scan_flops_ground_truth():
     st = module_stats(compiled.as_text(), pod_size=0, n_devices=1)
     want = L * 2 * B * D * D
     assert abs(st.flops - want) / want < 0.05
-    xla = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older jax returns [dict]
+        ca = ca[0]
+    xla = ca["flops"]
     assert xla < want            # documents the undercount we correct

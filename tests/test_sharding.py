@@ -2,8 +2,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.launch.mesh import make_test_mesh
 from repro.parallel.sharding import DEFAULT_RULES, MeshPlan
