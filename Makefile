@@ -1,0 +1,16 @@
+# Repo tooling. `make bench` refreshes the committed BENCH_*.json perf
+# trajectory (run it in any PR that touches the control plane); `make test`
+# is the tier-1 gate.
+
+PYTHONPATH := src
+
+.PHONY: test bench bench-all
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane
+
+bench-all:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json

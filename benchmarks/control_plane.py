@@ -2,20 +2,29 @@
 the management-plane numbers a production deployment is sized with).
 
   * register/discover/dispatch/heartbeat wall-time per op at 2..64 clusters
-  * scaling sweep: dispatch / overwatch-range / heartbeat per-op latency at
-    2..256 clusters with a keyspace preloaded to ~20 jobs per cluster (5k+
-    jobs at the top of the sweep) — the hot-path overhaul's acceptance gate is
-    that per-op latency stays flat (within 2x) from 32 to 256 clusters
+  * scaling sweep: dispatch / overwatch-range / heartbeat / batched-submit
+    per-op latency at 2..256 clusters with a keyspace preloaded to ~20 jobs
+    per cluster (5k+ jobs at the top of the sweep) — the hot-path overhaul's
+    acceptance gate is that per-op latency stays flat (within 2x) from 32 to
+    256 clusters
+  * sharded sweep: the same point measured at 32 -> 1024 clusters with a 4-shard
+    overwatch + coalesced watch delivery and ~50k preloaded jobs at the top —
+    the sharding overhaul's gate is dispatch within ~1.5x of the 32-cluster
+    point across that 32x scale-up
+  * recovery storm: watch-callback invocations when a cluster holding 5k jobs
+    dies — O(mutations) with synchronous notify, O(watchers) with coalesced
+    batch delivery
   * configuration-phase cost: Algorithm 5 runtime + messages for growing S
   * failure recovery: ticks from partition to re-dispatch
 
-``run_json()`` emits the sweep plus the frozen pre-overhaul baseline
+``run_json()`` emits the sweeps plus the frozen pre-overhaul baseline
 (SEED_BASELINE, measured on the seed implementation whose per-op cost grew
 with total keyspace size) — that is what ``benchmarks/run.py --json``
 records into BENCH_control_plane.json.
 """
 from __future__ import annotations
 
+import gc
 import time
 from typing import Callable, List
 
@@ -24,11 +33,17 @@ from repro.core.service_graph import AppSpec, Pod, Service
 
 SWEEP_SCALES = (2, 8, 32, 64, 128, 256)
 JOBS_PER_CLUSTER = 20
+# sharded sweep: 4 shards + coalesced watches, 1024 clusters / ~50k jobs on top
+SHARDED_SWEEP_SCALES = (32, 256, 1024)
+SHARDED_JOBS_PER_CLUSTER = 49            # 1024 * 49 = 50,176 jobs
+SHARDED_OW_SHARDS = 4
 
 # Pre-overhaul numbers (seed implementation, same sweep, same machine class):
 # per-op cost grew ~14x from 32 to 256 clusters because every dispatch sorted
 # the entire keyspace several times. Frozen here so BENCH_control_plane.json
-# always carries the before/after comparison.
+# always carries the before/after comparison. NOTE: these were measured with
+# single-run means (the seed harness); current sweeps use best-of-3 minima,
+# so cross-compare the within-sweep growth RATIOS, not absolute microseconds.
 SEED_BASELINE = {
     "label": "before (seed, full-keyspace scans)",
     "rows": [
@@ -48,11 +63,30 @@ SEED_BASELINE = {
 }
 
 
-def _time_us(fn: Callable[[], None], n: int = 50) -> float:
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) / n * 1e6
+def _time_us(fn: Callable[[], None], n: int = 50, repeats: int = 3,
+             per_call: int = 1) -> float:
+    """Best-of-``repeats`` mean over ``n`` calls, GC paused while timing;
+    ``per_call`` divides further when ``fn`` itself performs a batch of ops.
+
+    One scheduler hiccup inside a single 50-call chunk would dominate the
+    microsecond-scale numbers; and at the 1024-cluster/50k-job point the heap
+    holds millions of live objects, so a gen-2 GC pass landing inside a chunk
+    would wreck the flatness ratios with cost that is neither per-op nor
+    scale-dependent in the algorithmic sense being measured.
+    """
+    best = float("inf")
+    gc_was = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                fn()
+            best = min(best, (time.perf_counter() - t0) / (n * per_call) * 1e6)
+    finally:
+        if gc_was:
+            gc.enable()
+    return best
 
 
 def bench_plane_ops(n_clusters: int = 8) -> List[tuple]:
@@ -80,10 +114,14 @@ def bench_plane_ops(n_clusters: int = 8) -> List[tuple]:
 
 # ------------------------------------------------------------- scaling sweep
 def sweep_point(n_clusters: int,
-                jobs_per_cluster: int = JOBS_PER_CLUSTER) -> dict:
+                jobs_per_cluster: int = JOBS_PER_CLUSTER,
+                ow_shards: int = 1,
+                coalesce_watches: bool = False) -> dict:
     """Per-op latency at one scale, with the keyspace preloaded the way a
     long-running deployment looks (a placement + status row per job)."""
-    plane = ManagementPlane(message_log_limit=10_000, op_log_limit=10_000)
+    plane = ManagementPlane(message_log_limit=10_000, op_log_limit=10_000,
+                            ow_shards=ow_shards,
+                            coalesce_watches=coalesce_watches)
     plane.add_cluster("master", is_master=True)
     for i in range(n_clusters - 1):
         plane.add_cluster(f"c{i}")
@@ -103,6 +141,7 @@ def sweep_point(n_clusters: int,
                        "rate": 1.0, "clock": 0.0}})
     agent = plane.agents["c0"]
     row = {"clusters": n_clusters, "jobs": n_jobs}
+    agent.ow.range("/clusters/master")       # warm: one-time index compaction
     row["overwatch_range_us"] = _time_us(
         lambda: agent.ow.range("/clusters/master"), n=100)
     jid = [0]
@@ -111,8 +150,23 @@ def sweep_point(n_clusters: int,
         jid[0] += 1
         plane.submit_job("sim", steps=1, job_id=f"bench-{jid[0]}")
 
-    dispatch()                               # warm the dispatch relay channels
+    # warm every dispatch relay channel (round-robin covers each cluster once)
+    # so the timed region measures steady-state dispatch, not channel setup
+    plane.submit_jobs([{"kind": "sim", "steps": 1, "job_id": f"warm-{k}"}
+                       for k in range(n_clusters)])
+    plane.overwatch.sweep()                  # drain the warm batch's events
     row["dispatch_us"] = _time_us(dispatch, n=50)
+
+    def submit_batch():                      # batched admission (submit_many)
+        jid[0] += 1
+        plane.submit_jobs([{"kind": "sim", "steps": 1,
+                            "job_id": f"batch-{jid[0]}-{k}"}
+                           for k in range(32)])
+
+    # best-of-6 single batches: a 32-job batch is small enough that one
+    # hiccup would dominate the per-job number
+    row["submit_many_per_job_us"] = _time_us(submit_batch, n=1, repeats=6,
+                                             per_call=32)
     row["heartbeat_us"] = _time_us(agent.heartbeat, n=50)
     return row
 
@@ -138,6 +192,95 @@ def run_sweep(scales=SWEEP_SCALES) -> dict:
               "rows": rows, "flatness": flat}
     _SWEEP_CACHE[key] = result
     return result
+
+
+def _median_point(n: int, jobs_per_cluster: int, ow_shards: int,
+                  trials: int = 5) -> dict:
+    """Per-metric median over independently constructed planes: host jitter
+    on shared machines spans whole seconds, so repeating inside one plane
+    (best-of chunks) cannot filter a slow window that covers a whole point."""
+    samples = [sweep_point(n, jobs_per_cluster, ow_shards=ow_shards,
+                           coalesce_watches=True) for _ in range(trials)]
+    row = dict(samples[0])
+    for metric in ("overwatch_range_us", "dispatch_us",
+                   "submit_many_per_job_us", "heartbeat_us"):
+        row[metric] = sorted(s[metric] for s in samples)[trials // 2]
+    return row
+
+
+def run_sharded_sweep(scales=SHARDED_SWEEP_SCALES,
+                      jobs_per_cluster=SHARDED_JOBS_PER_CLUSTER,
+                      ow_shards=SHARDED_OW_SHARDS) -> dict:
+    """The sharding overhaul's gate: with a 4-shard overwatch and coalesced
+    watch delivery, per-op dispatch cost at 1024 clusters / ~50k jobs stays
+    within ~1.5x of the 32-cluster point."""
+    key = ("sharded", tuple(scales), jobs_per_cluster, ow_shards)
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    rows = [_median_point(n, jobs_per_cluster, ow_shards) for n in scales]
+    by_n = {r["clusters"]: r for r in rows}
+    flat = {}
+    lo, hi = min(scales), max(scales)
+    if lo in by_n and hi in by_n:
+        for metric in ("dispatch_us", "overwatch_range_us",
+                       "submit_many_per_job_us"):
+            flat[f"{metric}_ratio_{hi}_over_{lo}"] = (
+                by_n[hi][metric] / max(by_n[lo][metric], 1e-9))
+    result = {"label": f"sharded ({ow_shards} shards, coalesced watches)",
+              "ow_shards": ow_shards, "rows": rows, "flatness": flat}
+    _SWEEP_CACHE[key] = result
+    return result
+
+
+# ----------------------------------------------------------- recovery storm
+def bench_recovery_storm(n_clusters: int = 32, n_jobs: int = 5000) -> dict:
+    """Watch-callback invocations when a cluster holding ``n_jobs`` dies.
+
+    Synchronous notify fires one callback per mutation (O(jobs)); coalesced
+    delivery batches each flush round into one callback per watcher
+    (O(watchers)). Both configs recover every job; only the delivery shape
+    differs.
+    """
+    key = ("storm", n_clusters, n_jobs)
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    out = {"jobs": n_jobs, "clusters": n_clusters}
+    # both configs run the same shard count so the callback/timing delta
+    # isolates the delivery mode, not sharding
+    for label, coalesce in (("sync", False), ("coalesced", True)):
+        plane = ManagementPlane(message_log_limit=10_000, op_log_limit=10_000,
+                                ow_shards=SHARDED_OW_SHARDS,
+                                coalesce_watches=coalesce)
+        plane.add_cluster("master", is_master=True,
+                          local_plane=SimLocalPlane(caps=("control",)))
+        for i in range(n_clusters - 1):
+            plane.add_cluster(f"c{i}")
+        for j in range(n_jobs):
+            plane.overwatch.handle(
+                {"op": "put", "key": f"/jobs/pre-{j}/placement",
+                 "value": {"cluster": "c0",
+                           "job": {"job_id": f"pre-{j}", "kind": "sim",
+                                   "steps": 10, "tags": {}, "payload": {}},
+                           "clock": 0.0}})
+            plane.overwatch.handle(
+                {"op": "put", "key": f"/jobs/pre-{j}/status",
+                 "value": {"cluster": "c0", "status": "running",
+                           "progress": 1.0, "rate": 1.0, "clock": 0.0}})
+        plane.tick(n=2)
+        before = dict(plane.overwatch.watch_stats)
+        plane.fabric.partition_cluster("c0")
+        t0 = time.perf_counter()
+        plane.tick(n=8)                      # lease expiry -> recovery storm
+        dt = time.perf_counter() - t0
+        after = plane.overwatch.watch_stats
+        out[label] = {
+            "watch_callbacks": after.get("callbacks", 0)
+            - before.get("callbacks", 0),
+            "watch_events": after.get("events", 0) - before.get("events", 0),
+            "storm_s": dt,
+        }
+    _SWEEP_CACHE[key] = out
+    return out
 
 
 def bench_configuration_phase(n_services: int = 16, n_clusters: int = 4):
@@ -193,6 +336,16 @@ def run() -> List[tuple]:
         rows.append((f"sweep_dispatch{tag}", r["dispatch_us"]))
         rows.append((f"sweep_overwatch_range{tag}", r["overwatch_range_us"]))
         rows.append((f"sweep_heartbeat{tag}", r["heartbeat_us"]))
+        rows.append((f"sweep_submit_many{tag}", r["submit_many_per_job_us"]))
+    for r in run_sharded_sweep()["rows"]:
+        tag = f"[{r['clusters']}cl,{r['jobs']}jobs,sharded]"
+        rows.append((f"sweep_dispatch{tag}", r["dispatch_us"]))
+        rows.append((f"sweep_overwatch_range{tag}", r["overwatch_range_us"]))
+        rows.append((f"sweep_submit_many{tag}", r["submit_many_per_job_us"]))
+    storm = bench_recovery_storm()
+    for label in ("sync", "coalesced"):
+        rows.append((f"storm_watch_callbacks[{label},{storm['jobs']}jobs]",
+                     float(storm[label]["watch_callbacks"])))
     rows += bench_configuration_phase(8, 4)
     rows += bench_configuration_phase(32, 4)
     rows += bench_failure_recovery()
@@ -202,6 +355,8 @@ def run() -> List[tuple]:
 def run_json() -> dict:
     """Structured payload for ``benchmarks/run.py --json``."""
     return {"before": SEED_BASELINE, "after": run_sweep(),
+            "after_sharded": run_sharded_sweep(),
+            "storm": bench_recovery_storm(),
             "ops": [{"name": n, "us_per_call": v}
                     for n, v in bench_plane_ops(8)],
             "recovery": dict(bench_failure_recovery())}

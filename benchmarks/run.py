@@ -62,6 +62,7 @@ def main() -> int:
                 payload = (mod.run_json() if hasattr(mod, "run_json")
                            else _rows_to_json(rows))
                 payload = {"suite": name, **payload}
+                os.makedirs(out_dir, exist_ok=True)
                 path = os.path.join(out_dir, f"BENCH_{name}.json")
                 with open(path, "w") as f:
                     json.dump(payload, f, indent=2)

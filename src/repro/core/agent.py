@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional
 from repro.core import gateways as GW
 from repro.core.overwatch import OverwatchClient
 from repro.core.service_graph import AppSpec
-from repro.core.transport import Address, DeliveryError, Fabric
+from repro.core.transport import Address, DeliveryError, Envelope, Fabric
 
 AGENT_PORT = 6000
 AGENT_IP_SUFFIX = "0.20"
@@ -40,7 +40,7 @@ class JobRecord:
 class ControlAgent:
     def __init__(self, fabric: Fabric, cluster: str, idx: int, master: str,
                  local_plane, heartbeat_interval: float = 1.0,
-                 lease_ttl: float = 3.5):
+                 lease_ttl: float = 3.5, ow_shards: int = 1):
         self.fabric = fabric
         self.cluster = cluster
         self.idx = idx
@@ -48,6 +48,7 @@ class ControlAgent:
         self.local_plane = local_plane
         self.heartbeat_interval = heartbeat_interval
         self.lease_ttl = lease_ttl
+        self.ow_shards = max(1, ow_shards)
         self.state = GW.GatewayState(cluster=cluster, idx=idx)
         self.spec: Optional[AppSpec] = None
         self.jobs: Dict[str, JobRecord] = {}
@@ -57,18 +58,29 @@ class ControlAgent:
         self.addr: Address = (f"10.{idx}.{AGENT_IP_SUFFIX}", AGENT_PORT)
         fabric.register_handler(cluster, self.addr, self._handle)
         self.ow: Optional[OverwatchClient] = None
+        # telemetry envelope size is shape-constant (fixed keys, numeric
+        # values): computed on the first heartbeat, reused forever after so
+        # the fabric's byte accounting never re-walks the hottest message
+        self._telemetry_nbytes: Optional[int] = None
 
     # -------------------------------------------------------------- bootstrapping
     def bootstrap(self, master_state: GW.GatewayState) -> None:
-        """Initialization phase (paper §4.1): install the overwatch tunnel.
+        """Initialization phase (paper §4.1): install the overwatch tunnel(s).
 
-        Master-cluster agents talk to the overwatch directly; private agents get
-        one bootstrap channel egw[i] -> igw[m] that forwards to the overwatch.
+        Master-cluster agents talk to the overwatch directly; private agents
+        get one bootstrap channel egw[i] -> igw[m] that forwards to the
+        overwatch front-end. With a sharded overwatch, one additional tunnel
+        per shard (ranks just below ``OW_TUNNEL_RANK``) lets the client route
+        key ops straight to the owning shard's endpoint; the base tunnel keeps
+        carrying lease traffic and fan-out ranges.
         """
         from repro.core.overwatch import OVERWATCH_IP, OVERWATCH_PORT
+        n = self.ow_shards
         if self.cluster == self.master:
+            shard_addrs = ([(OVERWATCH_IP, OVERWATCH_PORT + 1 + i)
+                            for i in range(n)] if n > 1 else None)
             self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
-                                      self.master)
+                                      self.master, shard_addrs=shard_addrs)
             return
         eport = GW.EPORT_BASE + OW_TUNNEL_RANK
         iport = GW.IPORT_BASE + OW_TUNNEL_RANK
@@ -76,8 +88,23 @@ class ControlAgent:
                                 (OVERWATCH_IP, OVERWATCH_PORT))
         self.fabric.create_channel(self.cluster, (self.state.egw_ip, eport),
                                    self.master, (master_state.igw_ip, iport))
+        shard_vias = None
+        if n > 1:
+            shard_vias = []
+            for i in range(n):
+                rank = OW_TUNNEL_RANK - 1 - i
+                s_eport = GW.EPORT_BASE + rank
+                s_iport = GW.IPORT_BASE + rank
+                self.fabric.add_forward(
+                    self.master, (master_state.igw_ip, s_iport),
+                    (OVERWATCH_IP, OVERWATCH_PORT + 1 + i))
+                self.fabric.create_channel(
+                    self.cluster, (self.state.egw_ip, s_eport),
+                    self.master, (master_state.igw_ip, s_iport))
+                shard_vias.append((self.state.egw_ip, s_eport))
         self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
-                                  self.master, via=(self.state.egw_ip, eport))
+                                  self.master, via=(self.state.egw_ip, eport),
+                                  shard_vias=shard_vias)
 
     def register(self) -> None:
         """Lease-backed registration (overwatch = discovery + failure detection)."""
@@ -161,12 +188,17 @@ class ControlAgent:
                 if st["status"] in ("done", "failed"):
                     rec.status = st["status"]
                 self._report_job(jid)
-            self.ow.put(f"/telemetry/{self.cluster}", {
-                "clock": self.fabric.clock,
-                "load": self.local_plane.load(),
-                "running": sum(1 for r in self.jobs.values()
-                               if r.status == "running"),
-            })
+            req = Envelope({
+                "op": "put", "key": f"/telemetry/{self.cluster}",
+                "value": {
+                    "clock": self.fabric.clock,
+                    "load": self.local_plane.load(),
+                    "running": sum(1 for r in self.jobs.values()
+                                   if r.status == "running"),
+                }, "lease": None,
+            }, nbytes=self._telemetry_nbytes)
+            self.ow.request(req)
+            self._telemetry_nbytes = req.nbytes
             self.missed_heartbeats = 0
         except (DeliveryError, RuntimeError):
             self.missed_heartbeats += 1

@@ -32,6 +32,17 @@ and ``/jobs/`` watch events and maintains materialized views:
 
 Every view is derived purely from watch events emitted by the (linearizable)
 overwatch, so it is exactly as consistent as the range scans it replaces.
+
+Batch-event form (the sharding/coalescing overhaul): the views subscribe via
+``watch_batch`` and ingest revision-ordered event lists — one callback per
+flush instead of one per mutation. Every public method that reads a view
+opens with ``ow.flush_watches()``, the read barrier that makes the views
+exactly as fresh as a linearizable range would be; with coalescing off the
+batches are synchronous singletons and behavior is unchanged.
+
+``submit_many`` amortizes admission over a batch: the min-load block of
+``_load_order`` is computed once and unconstrained jobs round-robin across it
+without re-probing per job.
 """
 from __future__ import annotations
 
@@ -41,7 +52,7 @@ import itertools
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.overwatch import OverwatchService
-from repro.core.transport import DeliveryError, Fabric
+from repro.core.transport import DeliveryError, Envelope, Fabric
 
 
 @dataclasses.dataclass
@@ -75,11 +86,16 @@ class Dispatcher:
         self._running: Set[str] = set()
         self._straggler_rules: Dict[str, RoutingRule] = {}
         self._down_callbacks: List[Callable[[str], None]] = []
-        # failure detector + view maintenance: subscribe before any
-        # registration so the views never miss an event
-        overwatch.watch("/clusters/", self._on_cluster_event)
-        overwatch.watch("/telemetry/", self._on_telemetry_event)
-        overwatch.watch("/jobs/", self._on_job_event)
+        # failure detector + view maintenance: subscribe (batch form) before
+        # any registration so the views never miss an event. Registration
+        # order is load-bearing under coalesced delivery: batches flush in
+        # registration order, and a cluster tombstone's recovery side effect
+        # reads the job/telemetry views — so those views must ingest their
+        # slice of the flush round FIRST, or a job placed in the same round a
+        # cluster dies would be invisible to recover_cluster_jobs and lost.
+        overwatch.watch_batch("/jobs/", self._on_job_batch)
+        overwatch.watch_batch("/telemetry/", self._on_telemetry_batch)
+        overwatch.watch_batch("/clusters/", self._on_cluster_batch)
         self._seed_views()
 
     # ----------------------------------------------------------- view maintenance
@@ -133,28 +149,30 @@ class Dispatcher:
             self._cur_load[name] = load
             bisect.insort(self._load_order, (load, name))
 
-    def _on_cluster_event(self, event: str, key: str, value, rev: int) -> None:
-        cluster = key.split("/")[-1]
-        if event == "put":
-            self._cluster_put(cluster, value)
-            return
-        if event != "delete":
-            return
-        self._cluster_del(cluster)
-        for cb in self._down_callbacks:
-            cb(cluster)
-        self.recover_cluster_jobs(cluster)
+    def _on_cluster_batch(self, events: List[tuple]) -> None:
+        for event, key, value, _rev in events:
+            cluster = key.split("/")[-1]
+            if event == "put":
+                self._cluster_put(cluster, value)
+                continue
+            if event != "delete":
+                continue
+            self._cluster_del(cluster)
+            for cb in self._down_callbacks:
+                cb(cluster)
+            self.recover_cluster_jobs(cluster)
 
-    def _on_telemetry_event(self, event: str, key: str, value, rev: int) -> None:
-        cluster = key.split("/")[-1]
-        if event == "put":
-            self._telemetry_put(cluster, value)
-        elif event == "delete":
-            self._telemetry.pop(cluster, None)
-            if cluster in self._clusters:
-                self._load_order_discard(cluster)
-                self._cur_load[cluster] = 0.0
-                bisect.insort(self._load_order, (0.0, cluster))
+    def _on_telemetry_batch(self, events: List[tuple]) -> None:
+        for event, key, value, _rev in events:
+            cluster = key.split("/")[-1]
+            if event == "put":
+                self._telemetry_put(cluster, value)
+            elif event == "delete":
+                self._telemetry.pop(cluster, None)
+                if cluster in self._clusters:
+                    self._load_order_discard(cluster)
+                    self._cur_load[cluster] = 0.0
+                    bisect.insort(self._load_order, (0.0, cluster))
 
     def _job_put(self, key: str, value: dict) -> None:
         parts = key.split("/")
@@ -176,21 +194,23 @@ class Dispatcher:
             if value.get("status") == "done":
                 self._gc_straggler_rule(jid)
 
-    def _on_job_event(self, event: str, key: str, value, rev: int) -> None:
-        if event == "put":
-            self._job_put(key, value)
-            return
-        parts = key.split("/")
-        if len(parts) != 4:
-            return
-        _, _, jid, leaf = parts
-        if leaf == "placement":
-            old = self._placement.pop(jid, None)
-            if old is not None:
-                self._jobs_by_cluster.get(old["cluster"], set()).discard(jid)
-        elif leaf == "status":
-            self._status.pop(jid, None)
-            self._running.discard(jid)
+    def _on_job_batch(self, events: List[tuple]) -> None:
+        for event, key, value, _rev in events:
+            if event == "put":
+                self._job_put(key, value)
+                continue
+            parts = key.split("/")
+            if len(parts) != 4:
+                continue
+            _, _, jid, leaf = parts
+            if leaf == "placement":
+                old = self._placement.pop(jid, None)
+                if old is not None:
+                    self._jobs_by_cluster.get(old["cluster"],
+                                              set()).discard(jid)
+            elif leaf == "status":
+                self._status.pop(jid, None)
+                self._running.discard(jid)
 
     def _gc_straggler_rule(self, jid: str) -> None:
         """Satellite fix: straggler rules used to accumulate forever, slowing
@@ -205,9 +225,11 @@ class Dispatcher:
 
     # ---------------------------------------------------------------- directories
     def clusters(self) -> Dict[str, dict]:
+        self.ow.flush_watches()              # read barrier for the views
         return dict(self._clusters)
 
     def telemetry(self) -> Dict[str, dict]:
+        self.ow.flush_watches()
         return dict(self._telemetry)
 
     def _agent_addr(self, cluster: str):
@@ -216,17 +238,25 @@ class Dispatcher:
     # ----------------------------------------------------------------- CRD pubsub
     def broadcast_spec(self, spec, master_state) -> None:
         """The pubsub publisher: push the CRD to every registered agent."""
+        self.ow.flush_watches()
+        # one Envelope for the whole fan-out: the message is identical per
+        # cluster, so the AppSpec walk for byte accounting happens once, not
+        # O(clusters) times
+        msg = Envelope({"kind": "configure", "spec": spec,
+                        "master_state": master_state})
         for cluster in list(self._clusters):
-            self._send_agent(cluster, {"kind": "configure", "spec": spec,
-                                       "master_state": master_state})
+            self._send_agent(cluster, msg)
 
     def _send_agent(self, cluster: str, msg: dict) -> dict:
         info = self._clusters[cluster]          # one lookup, zero round-trips
         addr = tuple(info["agent_addr"])
-        if cluster == self.master:
+        if cluster == self.master:              # single hop: no Envelope copy
             return self.fabric.send(self.master, "system@dispatcher",
                                     cluster, addr, msg)
         # master -> private agent rides the lazily-created dispatch relay
+        # (multiple hops: size the envelope once)
+        if not isinstance(msg, Envelope):
+            msg = Envelope(msg)
         return self.fabric.send(self.master, "system@dispatcher", self.master,
                                 self._master_relay(cluster, info["idx"], addr),
                                 msg)
@@ -257,22 +287,34 @@ class Dispatcher:
         return cands
 
     def candidates(self, job: dict) -> List[str]:
+        self.ow.flush_watches()
         needs = set(job.get("tags", {}).get("requires", ()))
         return sorted(self._eligible(
             needs, [r for r in self.rules if r.match(job)]))
 
     def pick(self, job: dict) -> Optional[str]:
+        self.ow.flush_watches()
         needs = set(job.get("tags", {}).get("requires", ()))
         matched = [r for r in self.rules if r.match(job)]
+        return self._pick(needs, matched)
+
+    def _min_load_hi(self) -> int:
+        """End index of the least-loaded tie block: the contiguous,
+        name-sorted front of ``_load_order`` — O(log n). 0 when no cluster
+        is registered."""
+        if not self._load_order:
+            return 0
+        min_load = self._load_order[0][0]
+        return bisect.bisect_right(self._load_order, (min_load, "\U0010ffff"))
+
+    def _pick(self, needs: Set[str],
+              matched: List[RoutingRule]) -> Optional[str]:
         if not needs and not matched:
-            # unconstrained job: every cluster is eligible, so the least-loaded
-            # tie block is the contiguous, name-sorted front of _load_order —
-            # O(log n), no set materialization
-            if not self._load_order:
+            # unconstrained job: every cluster is eligible — index the tie
+            # block directly, no list materialization on the per-job path
+            hi = self._min_load_hi()
+            if not hi:
                 return None
-            min_load = self._load_order[0][0]
-            hi = bisect.bisect_right(self._load_order,
-                                     (min_load, "\U0010ffff"))
             return self._load_order[next(self._rr) % hi][1]
         cands = self._eligible(needs, matched)
         if not cands:
@@ -298,6 +340,11 @@ class Dispatcher:
         if cluster is None:
             raise RuntimeError(f"no eligible cluster for job {job['job_id']} "
                                f"(requires {job.get('tags', {})})")
+        self._dispatch_to(cluster, job)
+        return cluster
+
+    def _dispatch_to(self, cluster: str, job: dict) -> None:
+        """Placement already decided: ship the job and record the placement."""
         resp = self._send_agent(cluster, {"kind": "dispatch", "job": job})
         if not resp.get("ok"):
             raise RuntimeError(f"dispatch failed: {resp.get('error')}")
@@ -305,7 +352,65 @@ class Dispatcher:
                         "value": {"cluster": cluster, "job": job,
                                   "clock": self.fabric.clock}})
         self.dispatch_log.append((self.fabric.clock, job["job_id"], cluster))
-        return cluster
+
+    def submit_many(self, jobs: List[dict]) -> List[str]:
+        """Batched admission: amortize ``pick()`` over the batch.
+
+        The min-load block at the front of ``_load_order`` is computed once;
+        unconstrained jobs round-robin across it with no per-job re-probe
+        (telemetry cannot move mid-batch — loads only change via heartbeats,
+        which land between fabric ticks). Constrained jobs (capability tags or
+        matching routing rules) fall back to a per-job ``pick()``. Returns the
+        chosen cluster per job, in submission order.
+        """
+        self.ow.flush_watches()
+        placed: List[str] = []
+        block: Optional[List[str]] = None
+        for job in jobs:
+            needs = set(job.get("tags", {}).get("requires", ()))
+            matched = [r for r in self.rules if r.match(job)]
+            if not needs and not matched:
+                while True:
+                    if block is None:
+                        hi = self._min_load_hi()
+                        if not hi:
+                            raise RuntimeError(
+                                f"no eligible cluster for job {job['job_id']}")
+                        block = [name for _, name in self._load_order[:hi]]
+                    cluster = block[next(self._rr) % len(block)]
+                    if cluster in self._clusters:
+                        break
+                    # a cluster died mid-batch (lease swept by one of our own
+                    # placement puts, sync-notify mode): drop the stale block
+                    # and re-probe
+                    block = None
+            else:
+                cluster = self._pick(needs, matched)
+                if cluster is None:
+                    raise RuntimeError(
+                        f"no eligible cluster for job {job['job_id']} "
+                        f"(requires {job.get('tags', {})})")
+            try:
+                self._dispatch_to(cluster, job)
+            except DeliveryError:
+                # under coalesced delivery the death of a cluster mid-batch is
+                # only a pending tombstone, invisible to the membership check
+                # above — the dispatch itself fails instead. Take the barrier,
+                # re-place this one job on the refreshed views, and keep the
+                # rest of the batch going. Only unreachability retries: an
+                # agent-side rejection (RuntimeError) is job-intrinsic and
+                # propagates exactly as submit() would — already-placed jobs
+                # of the batch stay placed.
+                self.ow.flush_watches()
+                block = None
+                cluster = self._pick(needs, matched)
+                if cluster is None:
+                    raise RuntimeError(
+                        f"no eligible cluster for job {job['job_id']} "
+                        f"(requires {job.get('tags', {})})")
+                self._dispatch_to(cluster, job)
+            placed.append(cluster)
+        return placed
 
     # ----------------------------------------------------------- failure handling
     def on_cluster_down(self, cb: Callable[[str], None]) -> None:
@@ -315,6 +420,7 @@ class Dispatcher:
         """Re-dispatch every job placed on a dead cluster from its last committed
         checkpoint manifest. Uses the per-cluster placement index: cost scales
         with the dead cluster's jobs, not the whole /jobs/ keyspace."""
+        self.ow.flush_watches()
         moved = []
         for jid in sorted(self._jobs_by_cluster.get(dead, set())):
             placement = self._placement.get(jid)
@@ -342,6 +448,7 @@ class Dispatcher:
     def check_stragglers(self) -> List[str]:
         """Compare per-job step rates; re-dispatch jobs below factor x median.
         Scans the running-jobs view only — no /jobs/ range round-trip."""
+        self.ow.flush_watches()
         rates = {}
         for jid in sorted(self._running):
             val = self._status.get(jid)

@@ -1,4 +1,4 @@
-"""Strongly-consistent overwatch service (paper §2.iii).
+"""Strongly-consistent overwatch service (paper §2.iii) — sharded edition.
 
 A linearizable, versioned KV store with CAS, prefix ranges, leases and watches —
 the in-process stand-in for the cloud-managed RDBMS the paper assumes (Spanner/
@@ -15,16 +15,51 @@ Leases: registration keys attach to a lease; heartbeats are keepalives. A lease
 that misses its TTL expires, its keys are deleted, and watchers (the dispatcher's
 failure detector) see the tombstones.
 
-Hot-path data structures (the scaling overhaul):
-  * ``_keys`` — a sorted list of live keys maintained with ``bisect``, so
-    ``range(prefix)`` is O(log n + |result|) instead of sorting the whole
-    keyspace per call;
-  * watch buckets — watchers are indexed by the first path segment of their
-    prefix, so a mutation only consults the watchers that could possibly match
-    instead of scanning every registration;
-  * ``_expiry_heap`` — a lazy-deletion min-heap of (expires_at, lease_id), so
-    the per-``handle()`` lease sweep is O(1) when nothing is due instead of
-    O(#leases).
+Architecture (the sharding overhaul):
+
+  * ``OverwatchShard`` — one slice of the keyspace: a ``_kv`` dict, a sorted
+    ``_keys`` index (``range(prefix)`` is O(log n + |result|) after a lazy
+    compaction step — mutations record index edits in O(1) sets and the next
+    ``range`` folds them in, so put-heavy workloads never pay the O(n) sorted
+    insert), per-shard op counters and first-segment watch buckets. This is
+    the old single-store logic, extracted.
+  * ``ShardRouter`` — a consistent-hash ring (crc32 over routing segments,
+    ``vnodes`` virtual nodes per shard), so each shard owns a contiguous slice
+    of the ring and adding shards moves only ~1/N of the segments. The routing
+    segment is the first path segment (``/clusters/a`` -> ``clusters``),
+    extended to two segments for per-entity namespaces (``/jobs/job-7/status``
+    -> ``jobs/job-7``) so the dominant ``/jobs`` keyspace spreads across
+    shards instead of hotspotting one. A prefix that pins a complete routing
+    segment (``/clusters/...``, ``/jobs/job-7/...``) is served by exactly one
+    shard; anything shorter (``/jobs/``) fans out and merges.
+  * ``OverwatchService`` — the front-end. It preserves the exact
+    ``handle()``/``watch()`` API of the unsharded store (``num_shards=1`` is
+    behavior-compatible with the pre-shard implementation), owns the shared
+    revision clock, op-log, and lease table, and registers one fabric endpoint
+    per shard at ``(ip, port + 1 + shard)`` so clients can route around the
+    front-end hop.
+  * ``OverwatchReplica`` — a bounded-staleness read replica for telemetry
+    consumers: a revision-tagged snapshot maintained from the watch event
+    stream. ``range_stale(prefix, max_lag)`` serves from it whenever the
+    replica lags the primary by at most ``max_lag`` fabric-clock units and
+    catches up (one flush) otherwise; linearizable reads stay on the primary.
+
+Coalesced watch delivery (``coalesce_watches=True``): mutations enqueue
+``(event, key, value, rev)`` into per-shard batches instead of firing callbacks
+synchronously. Batches flush once per fabric tick (``sweep()``), and on the
+dispatcher's read barriers, so a 5k-job recovery storm delivers O(watchers)
+batched callbacks instead of O(mutations) synchronous ones. ``watch_batch``
+subscribers receive the whole revision-ordered event list in one call;
+legacy ``watch`` subscribers still get per-event callbacks (deferred to the
+flush). With coalescing off (the default) both kinds fire synchronously per
+mutation, exactly like the pre-batching implementation.
+
+Choosing shard counts: shards only pay off once a single store object is both
+hot and large — each shard adds one fabric endpoint and (for remote clusters)
+one gateway tunnel. 1 shard up to ~100 clusters, 4 shards for the
+1024-cluster/50k-job regime benchmarked in ``benchmarks/control_plane.py``;
+more than 8 is wasted until multiple masters serve shards from separate
+processes (the ROADMAP's multi-master step this refactor enables).
 """
 from __future__ import annotations
 
@@ -32,6 +67,7 @@ import bisect
 import dataclasses
 import heapq
 import itertools
+import zlib
 from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -39,6 +75,9 @@ from repro.core.transport import Address, Fabric, RingLog
 
 OVERWATCH_PORT = 7000
 OVERWATCH_IP = "10.0.0.2"
+
+# key ops route by req["key"]; everything else is front-end logic
+_KEY_OPS = ("put", "get", "delete", "cas")
 
 
 @dataclasses.dataclass
@@ -61,39 +100,392 @@ def _first_segment(path: str) -> Optional[str]:
     return path[1:end]
 
 
+def _sorted_insert(keys: List[str], key: str) -> None:
+    i = bisect.bisect_left(keys, key)
+    if i == len(keys) or keys[i] != key:
+        keys.insert(i, key)
+
+
+def _sorted_discard(keys: List[str], key: str) -> None:
+    i = bisect.bisect_left(keys, key)
+    if i < len(keys) and keys[i] == key:
+        del keys[i]
+
+
+# below this many pending index edits, patch the sorted list in place
+# (O(t log n + t·n) memmove); above it, one re-sort is cheaper
+_COMPACT_THRESHOLD = 32
+
+
+def _fold_index_edits(keys: List[str], added: set, removed: set) -> List[str]:
+    """Fold deferred index edits into a sorted key list (shared by the shard
+    and the replica: mutations stay O(1), readers pay amortized compaction).
+    Returns the compacted list and clears the edit sets."""
+    if added or removed:
+        if len(added) + len(removed) <= _COMPACT_THRESHOLD:
+            for k in removed:
+                _sorted_discard(keys, k)
+            for k in added:
+                _sorted_insert(keys, k)
+        else:
+            live = set(keys)
+            live -= removed
+            live |= added
+            keys = sorted(live)
+        added.clear()
+        removed.clear()
+    return keys
+
+
+def _prefix_slice(keys: List[str], prefix: str) -> Tuple[int, int]:
+    """[lo, hi) slice of a sorted key list covered by ``prefix`` (the
+    successor-prefix upper bound; empty prefix spans everything)."""
+    lo = bisect.bisect_left(keys, prefix)
+    if prefix:
+        hi = bisect.bisect_left(keys, prefix[:-1] + chr(ord(prefix[-1]) + 1),
+                                lo)
+    else:
+        hi = len(keys)
+    return lo, hi
+
+
+# Namespaces whose second segment joins the routing key: /jobs/<id> is the
+# dominant, per-entity keyspace (a placement + status row per job), so routing
+# it as one unit would hotspot a single shard with ~98% of the keys. Routing
+# /jobs/<id>/... by "jobs/<id>" spreads jobs across shards while keeping each
+# job's keys (and any /jobs/<id>/ prefix range or watch) on one shard.
+# Part of the client/server wire contract, like the ring parameters.
+_DEEP_NAMESPACES = frozenset({"jobs"})
+
+
+def _route_segment(key: str) -> str:
+    """Total routing function: the first path segment — extended to the second
+    for ``_DEEP_NAMESPACES`` — or the whole key when it has no internal
+    structure (``/cfg`` -> ``cfg``, ``cfg`` -> ``cfg``)."""
+    if not key.startswith("/"):
+        return key
+    end = key.find("/", 1)
+    if end < 0:
+        return key[1:]
+    seg = key[1:end]
+    if seg in _DEEP_NAMESPACES:
+        end2 = key.find("/", end + 1)
+        return key[1:end2] if end2 > 0 else key[1:]
+    return seg
+
+
+class ShardRouter:
+    """Consistent-hash ring over first path segments.
+
+    Each shard contributes ``vnodes`` virtual nodes; a segment hashes to the
+    next vnode clockwise, so every shard owns a set of contiguous hash-ring
+    slices and resizing moves only ~1/N of the segments. crc32 keeps placement
+    deterministic across processes (clients compute the same routing without
+    asking the server).
+    """
+
+    def __init__(self, num_shards: int, vnodes: int = 32):
+        # ring parameters are part of the wire contract: OverwatchClient
+        # rebuilds this ring from the shard COUNT alone (no topology
+        # exchange), so the vnode count and seed-string format below must
+        # change in lockstep on both sides — see OverwatchClient.__init__
+        self.num_shards = num_shards
+        ring: List[Tuple[int, int]] = []
+        for s in range(num_shards):
+            for v in range(vnodes):
+                h = zlib.crc32(f"overwatch-shard-{s}/vnode-{v}".encode())
+                ring.append((h & 0xFFFFFFFF, s))
+        ring.sort()
+        self._ring = ring
+        self._hashes = [h for h, _ in ring]
+        self._seg_cache: Dict[str, int] = {}
+
+    def shard_for_segment(self, seg: str) -> int:
+        s = self._seg_cache.get(seg)
+        if s is None:
+            if self.num_shards == 1:
+                s = 0
+            else:
+                h = zlib.crc32(seg.encode()) & 0xFFFFFFFF
+                i = bisect.bisect_right(self._hashes, h)
+                s = self._ring[i % len(self._ring)][1]
+            if len(self._seg_cache) < 65536:
+                self._seg_cache[seg] = s
+        return s
+
+    def shard_for_key(self, key: str) -> int:
+        return self.shard_for_segment(_route_segment(key))
+
+    def shard_for_prefix(self, prefix: str) -> Optional[int]:
+        """Owning shard when the prefix pins a complete routing segment
+        (``/clusters/...``, or ``/jobs/<id>/...`` for deep namespaces); None
+        when it straddles shards and must fan out (e.g. ``/jobs/``)."""
+        seg = _first_segment(prefix)
+        if seg is None:
+            return None
+        if seg in _DEEP_NAMESPACES:
+            end = prefix.find("/", 1)
+            end2 = prefix.find("/", end + 1)
+            if end2 < 0:
+                return None              # e.g. "/jobs/" spans every job shard
+            return self.shard_for_segment(prefix[1:end2])
+        return self.shard_for_segment(seg)
+
+
+class OverwatchShard:
+    """One slice of the keyspace: kv + sorted index + watch buckets.
+
+    Mutations ``emit`` watch events through the host: synchronously when
+    coalescing is off, into ``_pending`` batches when it is on. Watch entries
+    are ``(seq, prefix, cb, is_batch)`` — ``seq`` is the host-global
+    registration counter, preserving callback order across shards within each
+    subscriber kind (see ``OverwatchService.flush_watches`` for the coalesced
+    cross-kind ordering).
+    """
+
+    def __init__(self, host: "OverwatchService", shard_id: int):
+        self.host = host
+        self.shard_id = shard_id
+        self._kv: Dict[str, Tuple[Any, int]] = {}
+        self._keys: List[str] = []           # sorted index over _kv (compacted)
+        self._added: set = set()             # index edits since last compaction
+        self._removed: set = set()
+        self.op_counts: Counter = Counter()  # ops executed on this shard
+        self._watch_buckets: Dict[str, List[tuple]] = {}
+        self._watch_catchall: List[tuple] = []
+        self._pending: List[tuple] = []      # (rev, event, key, value)
+        # bound-method table: the hot path skips per-call getattr/concat
+        self._ops: Dict[str, Callable[[dict], dict]] = {
+            "put": self._op_put, "get": self._op_get,
+            "delete": self._op_delete, "cas": self._op_cas,
+            "range": self._op_range,
+        }
+
+    # ----------------------------------------------------------------- plumbing
+    def apply(self, op: str, req: dict) -> dict:
+        self.op_counts[op] += 1
+        return self._ops[op](req)
+
+    def _index_add(self, key: str) -> None:
+        """O(1): mutations never touch the sorted list; ``range`` compacts."""
+        self._added.add(key)
+        self._removed.discard(key)
+
+    def _index_discard(self, key: str) -> None:
+        self._removed.add(key)
+        self._added.discard(key)
+
+    def _compact_index(self) -> None:
+        self._keys = _fold_index_edits(self._keys, self._added, self._removed)
+
+    # ------------------------------------------------------------------ watches
+    def add_watch(self, entry: tuple) -> None:
+        seg = _first_segment(entry[1])
+        if seg is not None:
+            # any key matching this prefix must start with "/<seg>/", so the
+            # bucket lookup is exhaustive for it
+            self._watch_buckets.setdefault(seg, []).append(entry)
+        else:
+            self._watch_catchall.append(entry)
+
+    def matched_watchers(self, key: str) -> List[tuple]:
+        seg = _first_segment(key)
+        matched = [w for w in self._watch_catchall if key.startswith(w[1])]
+        if seg is not None:
+            matched += [w for w in self._watch_buckets.get(seg, ())
+                        if key.startswith(w[1])]
+        matched.sort(key=lambda w: w[0])     # registration order, as before
+        return matched
+
+    def emit(self, event: str, key: str, value: Any, rev: int) -> None:
+        host = self.host
+        if host.coalesce_watches:
+            self._pending.append((rev, event, key, value))
+            host._note_pending()
+            return
+        stats = host.watch_stats
+        for _, _, cb, is_batch in self.matched_watchers(key):
+            stats["callbacks"] += 1
+            stats["events"] += 1
+            if is_batch:
+                cb([(event, key, value, rev)])
+            else:
+                cb(event, key, value, rev)
+
+    def expire_key(self, key: str) -> None:
+        """Lease-expiry tombstone: delete + emit, bumped on the shared clock."""
+        if key in self._kv:
+            del self._kv[key]
+            self._index_discard(key)
+            rev = self.host._bump("expire", key)
+            self.emit("delete", key, None, rev)
+
+    # --------------------------------------------------------------------- ops
+    def _op_put(self, req: dict) -> dict:
+        key, value = req["key"], req["value"]
+        lease = None
+        if req.get("lease"):
+            # validate BEFORE mutating: a rejected put must leave no trace in
+            # the kv/revision clock, or the store and the watch-derived views
+            # would diverge forever (the error path emits no event)
+            lease = self.host._leases.get(req["lease"])
+            if lease is None:
+                return {"ok": False, "error": "lease expired or unknown"}
+        rev = self.host._bump("put", key, value)
+        if key not in self._kv:
+            self._index_add(key)
+        self._kv[key] = (value, rev)
+        if lease is not None:
+            lease.keys.add(key)
+        self.emit("put", key, value, rev)
+        return {"ok": True, "revision": rev}
+
+    def _op_get(self, req: dict) -> dict:
+        ent = self._kv.get(req["key"])
+        if ent is None:
+            return {"ok": True, "value": None, "revision": None}
+        return {"ok": True, "value": ent[0], "revision": ent[1]}
+
+    def _op_delete(self, req: dict) -> dict:
+        key = req["key"]
+        if key in self._kv:
+            del self._kv[key]
+            self._index_discard(key)
+            rev = self.host._bump("delete", key)
+            self.emit("delete", key, None, rev)
+            return {"ok": True, "revision": rev}
+        return {"ok": True, "revision": None}
+
+    def _op_cas(self, req: dict) -> dict:
+        """Compare-and-swap on revision (None => create-if-absent)."""
+        key, expect = req["key"], req["expect_revision"]
+        ent = self._kv.get(key)
+        cur = ent[1] if ent else None
+        if cur != expect:
+            return {"ok": True, "swapped": False, "revision": cur}
+        rev = self.host._bump("cas", key, req["value"])
+        if key not in self._kv:
+            self._index_add(key)
+        self._kv[key] = (req["value"], rev)
+        self.emit("put", key, req["value"], rev)
+        return {"ok": True, "swapped": True, "revision": rev}
+
+    def _op_range(self, req: dict) -> dict:
+        items = self.range_items(req["prefix"])
+        return {"ok": True, "items": items}
+
+    def range_items(self, prefix: str) -> Dict[str, Any]:
+        self._compact_index()
+        lo, hi = _prefix_slice(self._keys, prefix)
+        return {k: self._kv[k][0] for k in self._keys[lo:hi]}
+
+
+class OverwatchReplica:
+    """Bounded-staleness read replica: a revision-tagged snapshot kept current
+    by subscribing a batch watcher to every shard. With coalescing on it lags
+    the primary by at most one flush interval; ``range_stale`` decides whether
+    that lag is acceptable or forces a catch-up."""
+
+    def __init__(self, host: "OverwatchService"):
+        self._kv: Dict[str, Any] = {}
+        self._keys: List[str] = []
+        self._added: set = set()             # lazy index edits, like the shard
+        self._removed: set = set()
+        self.applied_rev = 0
+        for shard in host.shards:            # host flushed pending beforehand
+            for k, (v, rev) in shard._kv.items():
+                self._kv[k] = v
+        self._keys = sorted(self._kv)
+        self.applied_rev = host._rev
+        host._register(("", self._apply_batch), batch=True)
+
+    def _apply_batch(self, events: List[tuple]) -> None:
+        # O(1) per event: a 100k-event catch-up batch must not pay a sorted
+        # insert (O(n) memmove) per key inside the read barrier
+        for event, key, value, rev in events:
+            if event == "delete":
+                if key in self._kv:
+                    del self._kv[key]
+                    self._removed.add(key)
+                    self._added.discard(key)
+            else:
+                if key not in self._kv:
+                    self._added.add(key)
+                    self._removed.discard(key)
+                self._kv[key] = value
+            self.applied_rev = rev
+
+    def range_items(self, prefix: str) -> Dict[str, Any]:
+        self._keys = _fold_index_edits(self._keys, self._added, self._removed)
+        lo, hi = _prefix_slice(self._keys, prefix)
+        return {k: self._kv[k] for k in self._keys[lo:hi]}
+
+
 class OverwatchService:
-    """The store itself (runs on the master cluster)."""
+    """The sharded store's front-end (runs on the master cluster).
+
+    Owns the shared revision clock, op-log, lease table, and watch delivery;
+    routes key ops to shards. ``num_shards=1`` with ``coalesce_watches=False``
+    (the defaults) reproduces the unsharded, synchronous-notify store exactly.
+    """
 
     def __init__(self, fabric: Fabric, cluster: str,
                  addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
-                 op_log_limit: Optional[int] = None):
+                 op_log_limit: Optional[int] = None,
+                 num_shards: int = 1,
+                 coalesce_watches: bool = False):
         self.fabric = fabric
         self.cluster = cluster
         self.addr = addr
-        self._kv: Dict[str, Tuple[Any, int]] = {}
-        self._keys: List[str] = []           # sorted index over _kv
+        self.coalesce_watches = coalesce_watches
         self._rev = 0
         self.op_log: RingLog = RingLog(op_log_limit)
         self.op_counts: Counter = Counter()  # every handled op, reads included
         self._leases: Dict[int, Lease] = {}
         self._lease_ids = itertools.count(1)
         self._expiry_heap: List[Tuple[float, int]] = []
+        self._sweeping = False
         # watch registrations: seq preserves global callback ordering across
-        # buckets, buckets bound how many registrations a mutation consults
+        # shards and buckets; per-shard buckets bound how many registrations a
+        # mutation consults
         self._watch_seq = itertools.count()
-        self._watch_buckets: Dict[str, List[Tuple[int, str, Callable]]] = {}
-        self._watch_catchall: List[Tuple[int, str, Callable]] = []
+        self.watch_stats: Counter = Counter()   # callbacks + events delivered
+        self.router = ShardRouter(max(1, num_shards))
+        self.shards: List[OverwatchShard] = [
+            OverwatchShard(self, i) for i in range(self.router.num_shards)]
+        self._pending_since: Optional[float] = None
+        self._delivering = False
+        self._replica: Optional[OverwatchReplica] = None
         fabric.register_handler(cluster, addr, self.handle)
+        # one endpoint per shard, so shard-aware clients skip the front-end hop
+        for i in range(len(self.shards)):
+            fabric.register_handler(
+                cluster, (addr[0], addr[1] + 1 + i),
+                lambda req, _i=i: self._dispatch(req, self.shards[_i]))
 
-    # ----------------------------------------------------------------------- plumbing
+    # ----------------------------------------------------------------- plumbing
     def handle(self, req: dict) -> dict:
+        return self._dispatch(req, None)
+
+    def _dispatch(self, req: dict, shard: Optional[OverwatchShard]) -> dict:
         self._sweep_leases()
         op = req["op"]
         self.op_counts[op] += 1
-        fn = getattr(self, "_op_" + op, None)
-        if fn is None:
-            return {"ok": False, "error": f"unknown op {op}"}
         try:
+            if op in _KEY_OPS:
+                target = shard if shard is not None else \
+                    self.shards[self.router.shard_for_key(req["key"])]
+                return target.apply(op, req)
+            if op == "range":
+                if shard is None:
+                    sid = self.router.shard_for_prefix(req["prefix"])
+                    shard = self.shards[sid] if sid is not None else None
+                if shard is not None:
+                    return shard.apply("range", req)
+                return self._range_fanout(req)
+            fn = getattr(self, "_op_" + op, None)
+            if fn is None:
+                return {"ok": False, "error": f"unknown op {op}"}
             return fn(req)
         except Exception as e:              # noqa: BLE001 - surfaced to caller
             return {"ok": False, "error": f"{type(e).__name__}: {e}"}
@@ -103,30 +495,18 @@ class OverwatchService:
         self.op_log.append((self._rev, op, key, value))
         return self._rev
 
-    def _index_add(self, key: str) -> None:
-        i = bisect.bisect_left(self._keys, key)
-        if i == len(self._keys) or self._keys[i] != key:
-            self._keys.insert(i, key)
+    def _range_fanout(self, req: dict) -> dict:
+        """Prefix straddles shards: merge each shard's slice, re-sorted."""
+        merged: Dict[str, Any] = {}
+        for shard in self.shards:
+            merged.update(shard.apply("range", req)["items"])
+        return {"ok": True, "items": {k: merged[k] for k in sorted(merged)}}
 
-    def _index_discard(self, key: str) -> None:
-        i = bisect.bisect_left(self._keys, key)
-        if i < len(self._keys) and self._keys[i] == key:
-            del self._keys[i]
-
-    def _notify(self, event: str, key: str, value: Any, rev: int) -> None:
-        seg = _first_segment(key)
-        matched = [w for w in self._watch_catchall if key.startswith(w[1])]
-        if seg is not None:
-            matched += [w for w in self._watch_buckets.get(seg, ())
-                        if key.startswith(w[1])]
-        matched.sort(key=lambda w: w[0])     # registration order, as before
-        for _, _, cb in matched:
-            cb(event, key, value, rev)
-
+    # -------------------------------------------------------------------- leases
     def _sweep_leases(self) -> None:
-        # _notify callbacks can re-enter handle() -> _sweep_leases(); pop each
+        # watch callbacks can re-enter handle() -> _sweep_leases(); pop each
         # expired lease BEFORE notifying so reentrant sweeps never double-free.
-        if getattr(self, "_sweeping", False):
+        if self._sweeping:
             return
         now = self.fabric.clock
         heap = self._expiry_heap
@@ -141,69 +521,9 @@ class OverwatchService:
                     continue                 # stale entry (keepalive or gone)
                 del self._leases[lid]
                 for key in sorted(lease.keys):
-                    if key in self._kv:
-                        del self._kv[key]
-                        self._index_discard(key)
-                        rev = self._bump("expire", key)
-                        self._notify("delete", key, None, rev)
+                    self.shards[self.router.shard_for_key(key)].expire_key(key)
         finally:
             self._sweeping = False
-
-    # --------------------------------------------------------------------------- ops
-    def _op_put(self, req: dict) -> dict:
-        key, value = req["key"], req["value"]
-        rev = self._bump("put", key, value)
-        if key not in self._kv:
-            self._index_add(key)
-        self._kv[key] = (value, rev)
-        if "lease" in req and req["lease"]:
-            lease = self._leases.get(req["lease"])
-            if lease is None:
-                return {"ok": False, "error": "lease expired or unknown"}
-            lease.keys.add(key)
-        self._notify("put", key, value, rev)
-        return {"ok": True, "revision": rev}
-
-    def _op_get(self, req: dict) -> dict:
-        ent = self._kv.get(req["key"])
-        if ent is None:
-            return {"ok": True, "value": None, "revision": None}
-        return {"ok": True, "value": ent[0], "revision": ent[1]}
-
-    def _op_delete(self, req: dict) -> dict:
-        key = req["key"]
-        if key in self._kv:
-            del self._kv[key]
-            self._index_discard(key)
-            rev = self._bump("delete", key)
-            self._notify("delete", key, None, rev)
-            return {"ok": True, "revision": rev}
-        return {"ok": True, "revision": None}
-
-    def _op_cas(self, req: dict) -> dict:
-        """Compare-and-swap on revision (None => create-if-absent)."""
-        key, expect = req["key"], req["expect_revision"]
-        ent = self._kv.get(key)
-        cur = ent[1] if ent else None
-        if cur != expect:
-            return {"ok": True, "swapped": False, "revision": cur}
-        rev = self._bump("cas", key, req["value"])
-        if key not in self._kv:
-            self._index_add(key)
-        self._kv[key] = (req["value"], rev)
-        self._notify("put", key, req["value"], rev)
-        return {"ok": True, "swapped": True, "revision": rev}
-
-    def _op_range(self, req: dict) -> dict:
-        prefix = req["prefix"]
-        lo = bisect.bisect_left(self._keys, prefix)
-        if prefix:
-            hi = bisect.bisect_left(self._keys, prefix[:-1] +
-                                    chr(ord(prefix[-1]) + 1), lo)
-        else:
-            hi = len(self._keys)
-        items = {k: self._kv[k][0] for k in self._keys[lo:hi]}
-        return {"ok": True, "items": items}
 
     def _op_lease_grant(self, req: dict) -> dict:
         lid = next(self._lease_ids)
@@ -221,29 +541,161 @@ class OverwatchService:
         heapq.heappush(self._expiry_heap, (lease.expires_at, lease.lease_id))
         return {"ok": True}
 
-    # ------------------------------------------------------------- local-side watches
+    # ----------------------------------------------------- topology / replica ops
+    def _op_shard_map(self, req: dict) -> dict:
+        return {"ok": True, "num_shards": len(self.shards),
+                "ports": [self.addr[1] + 1 + i
+                          for i in range(len(self.shards))]}
+
+    def _op_range_stale(self, req: dict) -> dict:
+        """Bounded-staleness range off the replica snapshot. Serves the current
+        replica state when its lag is within ``max_lag`` fabric-clock units;
+        otherwise catches up (one flush) first. The bound is never silently
+        violated: if the catch-up flush cannot run (the caller sits inside an
+        active flush, where nested barriers are no-ops) the read falls back to
+        the linearizable primary — fresher than asked, never staler."""
+        max_lag = float(req.get("max_lag", 0.0))
+        prefix = req["prefix"]
+        if self._replica is None:
+            self.flush_watches()             # snapshot from a quiesced stream
+            self._replica = OverwatchReplica(self)
+        lag = self._replica_lag()
+        if lag > max_lag:
+            self.flush_watches()
+            lag = self._replica_lag()
+        if lag > max_lag:
+            sid = self.router.shard_for_prefix(prefix)
+            shards = self.shards if sid is None else [self.shards[sid]]
+            merged: Dict[str, Any] = {}
+            for shard in shards:
+                merged.update(shard.range_items(prefix))
+            return {"ok": True,
+                    "items": {k: merged[k] for k in sorted(merged)},
+                    "lag": 0.0, "replica_rev": self._rev}
+        items = self._replica.range_items(prefix)
+        return {"ok": True, "items": items, "lag": lag,
+                "replica_rev": self._replica.applied_rev}
+
+    def _replica_lag(self) -> float:
+        if self._pending_since is None:
+            return 0.0
+        return self.fabric.clock - self._pending_since
+
+    # ------------------------------------------------------------- local watches
     def watch(self, prefix: str, cb: Callable[[str, str, Any, int], None]) -> None:
-        """Master-side components (dispatcher) subscribe to key events."""
-        entry = (next(self._watch_seq), prefix, cb)
-        seg = _first_segment(prefix)
-        if seg is not None:
-            # any key matching this prefix must start with "/<seg>/", so the
-            # bucket lookup is exhaustive for it
-            self._watch_buckets.setdefault(seg, []).append(entry)
-        else:
-            self._watch_catchall.append(entry)
+        """Master-side components subscribe to per-event key callbacks."""
+        self._register((prefix, cb), batch=False)
+
+    def watch_batch(self, prefix: str,
+                    cb: Callable[[List[tuple]], None]) -> None:
+        """Batch subscription: one callback per flush with the revision-ordered
+        ``[(event, key, value, rev), ...]`` list (singleton lists when
+        coalescing is off)."""
+        self._register((prefix, cb), batch=True)
+
+    def _register(self, prefix_cb: tuple, batch: bool) -> None:
+        prefix, cb = prefix_cb
+        entry = (next(self._watch_seq), prefix, cb, batch)
+        sid = self.router.shard_for_prefix(prefix)
+        targets = [self.shards[sid]] if sid is not None else self.shards
+        for shard in targets:
+            shard.add_watch(entry)
+
+    # --------------------------------------------------------- coalesced delivery
+    def _note_pending(self) -> None:
+        if self._pending_since is None:
+            self._pending_since = self.fabric.clock
+
+    def flush_watches(self) -> None:
+        """Deliver coalesced batches; the read barrier for view consumers.
+
+        Loops until quiescent: callbacks that mutate (the dispatcher's recovery
+        storm) enqueue fresh events that flush in the next round — so a storm
+        costs O(watchers x rounds) invocations, not O(mutations). No-op when
+        coalescing is off, nothing is pending, or a flush is already running
+        (nested barriers fold into the outer loop).
+
+        Delivery order within a round: per-event (legacy ``watch``) subscribers
+        fire during the revision-ordered walk, in (rev, seq) order; batch
+        subscribers then fire once each, in registration (seq) order, with
+        their full event lists. A raising callback does NOT lose events — the
+        round finishes delivering to everyone else and the first exception
+        re-raises at the barrier (synchronous notify lost at most the
+        remaining watchers of one event; losing a whole round would leave the
+        watch-derived views divergent forever).
+        """
+        if not self.coalesce_watches or self._delivering:
+            return
+        if self._pending_since is None:
+            return
+        self._delivering = True
+        stats = self.watch_stats
+        errors: List[BaseException] = []
+        try:
+            while True:
+                merged: List[tuple] = []
+                for shard in self.shards:
+                    if shard._pending:
+                        pend, shard._pending = shard._pending, []
+                        for ev in pend:
+                            merged.append((ev[0], shard, ev))
+                if not merged:
+                    self._pending_since = None
+                    break
+                merged.sort(key=lambda x: x[0])      # global revision order
+                batches: Dict[int, Tuple[Callable, list]] = {}
+                for rev, shard, (_, event, key, value) in merged:
+                    for seq, _, cb, is_batch in shard.matched_watchers(key):
+                        if is_batch:
+                            if seq not in batches:
+                                batches[seq] = (cb, [])
+                            batches[seq][1].append((event, key, value, rev))
+                        else:
+                            stats["callbacks"] += 1
+                            stats["events"] += 1
+                            try:
+                                cb(event, key, value, rev)
+                            except Exception as e:   # noqa: BLE001
+                                errors.append(e)
+                for seq in sorted(batches):
+                    cb, events = batches[seq]
+                    stats["callbacks"] += 1
+                    stats["events"] += len(events)
+                    try:
+                        cb(events)
+                    except Exception as e:           # noqa: BLE001
+                        errors.append(e)
+        finally:
+            self._delivering = False
+        if errors:
+            if len(errors) > 1:
+                raise RuntimeError(
+                    f"{len(errors)} watch subscribers failed during flush; "
+                    f"first: {errors[0]!r}, also: "
+                    f"{[repr(e) for e in errors[1:]]}") from errors[0]
+            raise errors[0]
 
     def sweep(self) -> None:
         self._sweep_leases()
+        self.flush_watches()
 
 
 class OverwatchClient:
-    """RPC stub: every call crosses the fabric from ``src_cluster`` to master."""
+    """RPC stub: every call crosses the fabric from ``src_cluster`` to master.
+
+    Shard-aware when given per-shard targets: key ops and single-segment prefix
+    ranges go straight to the owning shard's endpoint (``shard_addrs``, for
+    master-local clients) or tunnel (``shard_vias``, for remote clusters);
+    lease ops and fan-out ranges use the front-end. Without shard targets the
+    client behaves exactly like the unsharded original.
+    """
 
     def __init__(self, fabric: Fabric, src_cluster: str, src_id: str,
                  master_cluster: str,
                  addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
-                 via: Optional[Address] = None):
+                 via: Optional[Address] = None,
+                 shard_addrs: Optional[List[Address]] = None,
+                 shard_vias: Optional[List[Address]] = None):
         self.fabric = fabric
         self.src_cluster = src_cluster
         self.src_id = src_id
@@ -251,20 +703,49 @@ class OverwatchClient:
         self.addr = addr
         # remote agents reach the overwatch through their egress gateway mapping
         self.via = via
+        self.shard_addrs = shard_addrs
+        self.shard_vias = shard_vias
+        # default ring parameters MUST match the service's (wire contract —
+        # the client derives placement from the shard count alone)
+        n = len(shard_addrs or shard_vias or ())
+        self._router = ShardRouter(n) if n > 1 else None
+
+    def _route(self, req: dict) -> Tuple[str, Address]:
+        """(dest_cluster, dest_addr) for this request — shard endpoint for key
+        ops when shard routing is configured, front-end otherwise."""
+        local = self.src_cluster == self.master_cluster
+        if self._router is not None:
+            op = req["op"]
+            sid: Optional[int] = None
+            if op in _KEY_OPS:
+                sid = self._router.shard_for_key(req["key"])
+            elif op == "range":
+                sid = self._router.shard_for_prefix(req["prefix"])
+            if sid is not None:
+                if local and self.shard_addrs:
+                    return self.master_cluster, self.shard_addrs[sid]
+                if not local and self.shard_vias:
+                    return self.src_cluster, self.shard_vias[sid]
+        if local:
+            return self.master_cluster, self.addr
+        if self.via is None:
+            raise RuntimeError(
+                "remote overwatch access requires a gateway route (via=)")
+        return self.src_cluster, self.via
 
     def _call(self, req: dict) -> dict:
-        if self.src_cluster == self.master_cluster:
-            resp = self.fabric.send(self.src_cluster, self.src_id,
-                                    self.master_cluster, self.addr, req)
-        else:
-            if self.via is None:
-                raise RuntimeError(
-                    "remote overwatch access requires a gateway route (via=)")
-            resp = self.fabric.send(self.src_cluster, self.src_id,
-                                    self.src_cluster, self.via, req)
+        dst_cluster, dst_addr = self._route(req)
+        resp = self.fabric.send(self.src_cluster, self.src_id,
+                                dst_cluster, dst_addr, req)
         if not resp.get("ok", False):
             raise RuntimeError(f"overwatch: {resp.get('error')}")
         return resp
+
+    def request(self, req: dict) -> dict:
+        """Send a pre-built request — the hook for hot callers that reuse a
+        precomputed ``Envelope`` size (e.g. the agent's fixed-shape telemetry
+        heartbeat) so the fabric never re-walks the value dict."""
+        return self._call(req)
 
     def put(self, key: str, value: Any, lease: Optional[int] = None) -> int:
         return self._call({"op": "put", "key": key, "value": value,
@@ -286,6 +767,11 @@ class OverwatchClient:
 
     def range(self, prefix: str) -> Dict[str, Any]:
         return self._call({"op": "range", "prefix": prefix})["items"]
+
+    def range_stale(self, prefix: str, max_lag: float) -> Dict[str, Any]:
+        """Bounded-staleness range off the read replica (telemetry path)."""
+        return self._call({"op": "range_stale", "prefix": prefix,
+                           "max_lag": max_lag})["items"]
 
     def lease_grant(self, ttl: float) -> int:
         return self._call({"op": "lease_grant", "ttl": ttl})["lease"]

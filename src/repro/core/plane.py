@@ -58,13 +58,18 @@ class SimLocalPlane:
 class ManagementPlane:
     def __init__(self, master: str = "master",
                  message_log_limit: Optional[int] = 100_000,
-                 op_log_limit: Optional[int] = None):
+                 op_log_limit: Optional[int] = None,
+                 ow_shards: int = 1,
+                 coalesce_watches: bool = False):
         self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
         self._idx = itertools.count(1)
         self.agents: Dict[str, ControlAgent] = {}
+        self.ow_shards = max(1, ow_shards)
         self.overwatch = OverwatchService(self.fabric, master,
-                                          op_log_limit=op_log_limit)
+                                          op_log_limit=op_log_limit,
+                                          num_shards=self.ow_shards,
+                                          coalesce_watches=coalesce_watches)
         self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
         self.spec: Optional[AppSpec] = None
         self._job_ids = itertools.count(1)
@@ -77,7 +82,8 @@ class ManagementPlane:
         if local_plane is None:
             local_plane = SimLocalPlane()
         idx = 0 if is_master else next(self._idx)
-        agent = ControlAgent(self.fabric, name, idx, self.master, local_plane)
+        agent = ControlAgent(self.fabric, name, idx, self.master, local_plane,
+                             ow_shards=self.ow_shards)
         self.agents[name] = agent
         if is_master:
             self._master_agent = agent
@@ -102,14 +108,26 @@ class ManagementPlane:
         self.dispatcher.broadcast_spec(spec, self._master_agent.state)
 
     # ------------------------------------------------------------------ job surface
-    def submit_job(self, kind: str, *, arch: str = "", steps: int = 10,
+    def _build_job(self, kind: str, *, arch: str = "", steps: int = 10,
                    tags: Optional[dict] = None, job_id: Optional[str] = None,
-                   payload: Optional[dict] = None) -> str:
+                   payload: Optional[dict] = None) -> dict:
         jid = job_id or f"job-{next(self._job_ids):04d}"
-        job = {"job_id": jid, "kind": kind, "arch": arch, "steps": steps,
-               "tags": tags or {}, "payload": payload or {}}
+        return {"job_id": jid, "kind": kind, "arch": arch, "steps": steps,
+                "tags": tags or {}, "payload": payload or {}}
+
+    def submit_job(self, kind: str, **kw) -> str:
+        job = self._build_job(kind, **kw)
         self.dispatcher.submit(job)
-        return jid
+        return job["job_id"]
+
+    def submit_jobs(self, jobs: List[dict]) -> List[str]:
+        """Batched admission: each item is a dict of ``submit_job`` keyword
+        arguments (``kind`` required). The dispatcher amortizes placement over
+        the whole batch (one min-load probe, round-robin across the tie block)
+        instead of re-picking per job. Returns the job ids in order."""
+        built = [self._build_job(**spec) for spec in jobs]
+        self.dispatcher.submit_many(built)
+        return [job["job_id"] for job in built]
 
     def job_status(self, job_id: str) -> Optional[dict]:
         return self.overwatch.handle(

@@ -87,6 +87,32 @@ class Channel:
         return None
 
 
+class Envelope(dict):
+    """A dict payload with a cached byte size (zero-copy accounting).
+
+    Hot envelope types — overwatch ops, telemetry heartbeats, job dispatches —
+    are built once and then traverse several fabric hops (gateway forwards,
+    channel crossings), each of which used to re-walk every nested value dict
+    in ``_payload_bytes``. An ``Envelope`` is sized exactly once: at
+    construction when the sender already knows the size (``nbytes=``), or
+    lazily on the first ``send`` — subsequent hops read the cached number.
+    The computed size is identical to the plain-dict walk, so byte ledgers are
+    unchanged; only the walking stops.
+    """
+
+    __slots__ = ("_nbytes",)
+
+    def __init__(self, *args, nbytes: Optional[int] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._nbytes = nbytes
+
+    @property
+    def nbytes(self) -> int:
+        if self._nbytes is None:
+            self._nbytes = _dict_bytes(self)
+        return self._nbytes
+
+
 # Control-plane traffic is dominated by a small vocabulary of repeated strings
 # (op names, key prefixes, field names) and fixed dict envelopes, so byte
 # accounting memoizes per-string encoded sizes and per-envelope key overhead.
@@ -105,23 +131,29 @@ def _str_bytes(s: str) -> int:
     return n
 
 
+def _dict_bytes(payload: dict) -> int:
+    try:
+        sig = tuple(payload.keys())
+        key_bytes = _DICT_KEYS_CACHE.get(sig)
+        if key_bytes is None:
+            key_bytes = sum(_payload_bytes(k) for k in sig)
+            if len(_DICT_KEYS_CACHE) >= _CACHE_LIMIT:
+                _DICT_KEYS_CACHE.clear()
+            _DICT_KEYS_CACHE[sig] = key_bytes
+    except TypeError:                 # unhashable keys: no memoization
+        key_bytes = sum(_payload_bytes(k) for k in payload)
+    return key_bytes + sum(_payload_bytes(v) for v in payload.values())
+
+
 def _payload_bytes(payload: Any) -> int:
+    if isinstance(payload, Envelope):
+        return payload.nbytes          # precomputed / cached — no value walk
     if isinstance(payload, (bytes, bytearray)):
         return len(payload)
     if isinstance(payload, str):
         return _str_bytes(payload)
     if isinstance(payload, dict):
-        try:
-            sig = tuple(payload.keys())
-            key_bytes = _DICT_KEYS_CACHE.get(sig)
-            if key_bytes is None:
-                key_bytes = sum(_payload_bytes(k) for k in sig)
-                if len(_DICT_KEYS_CACHE) >= _CACHE_LIMIT:
-                    _DICT_KEYS_CACHE.clear()
-                _DICT_KEYS_CACHE[sig] = key_bytes
-        except TypeError:                 # unhashable keys: no memoization
-            key_bytes = sum(_payload_bytes(k) for k in payload)
-        return key_bytes + sum(_payload_bytes(v) for v in payload.values())
+        return _dict_bytes(payload)
     if isinstance(payload, (list, tuple)):
         return sum(_payload_bytes(v) for v in payload)
     if isinstance(payload, (int, float, bool)) or payload is None:

@@ -10,10 +10,11 @@ marked upstream_failed.
 
 Hot path (the scaling overhaul): instead of pulling the full ``dag_state`` for
 every DAG on every tick, the scheduler keeps a cached per-DAG state and asks
-the taskdb only for the *delta* since its cursor (``dag_delta``). A DAG whose
+the taskdb only for the *deltas* since its cursors — multiplexed over ALL
+registered DAGs in one ``dag_delta_many`` round-trip per tick. A DAG whose
 tasks did not change and which scheduled nothing last pass is quiescent and
-costs a single O(1) delta probe per tick — event-driven scheduling rather than
-polling.
+costs nothing beyond its slice of that single probe — event-driven scheduling
+rather than polling.
 """
 from __future__ import annotations
 
@@ -46,13 +47,18 @@ class Scheduler:
 
     # -------------------------------------------------------------------- one tick
     def tick(self) -> List[str]:
-        scheduled = []
+        scheduled: List[str] = []
+        if not self.dags:
+            return scheduled
+        # one multiplexed delta probe for every registered DAG
+        resp = self.client.call("taskdb", {
+            "op": "dag_delta_many",
+            "dags": {d: self._cursor.get(d, 0) for d in self.dags}})
+        deltas = resp["deltas"]
+        cursor = resp["cursor"]
         for dag in self.dags.values():
-            resp = self.client.call("taskdb", {
-                "op": "dag_delta", "dag": dag.dag_id,
-                "since": self._cursor.get(dag.dag_id, 0)})
-            changed = resp["tasks"]
-            self._cursor[dag.dag_id] = resp["cursor"]
+            changed = deltas.get(dag.dag_id, {})
+            self._cursor[dag.dag_id] = cursor
             state = self._state.setdefault(dag.dag_id, {})
             state.update(changed)
             if not changed and dag.dag_id in self._quiescent:

@@ -9,9 +9,12 @@ Hot path (the scaling overhaul): the DB maintains a per-DAG latest-try view
 and a per-DAG change log, so
 
   * ``dag_state`` / ``latest`` no longer scan every row in the table;
-  * the new ``dag_delta`` op gives the scheduler incremental dirty-task
+  * the ``dag_delta`` op gives the scheduler incremental dirty-task
     deltas — rows changed since a cursor — so a quiescent DAG costs O(1)
-    per scheduler tick instead of a full state dump.
+    per scheduler tick instead of a full state dump;
+  * ``dag_delta_many`` multiplexes the deltas of every registered DAG into
+    one call — the scheduler pays a single taskdb round-trip per tick no
+    matter how many DAGs it owns.
 """
 from __future__ import annotations
 
@@ -70,6 +73,13 @@ class TaskDB:
                     "tasks": dict(self._latest.get(msg["dag"], {}))}
         if op == "dag_delta":
             return self._dag_delta(msg["dag"], int(msg.get("since", 0)))
+        if op == "dag_delta_many":
+            deltas = {}
+            for dag, since in msg["dags"].items():
+                tasks = self._dag_delta(dag, int(since))["tasks"]
+                if tasks:
+                    deltas[dag] = tasks
+            return {"ok": True, "deltas": deltas, "cursor": self._seq}
         return {"ok": False, "error": f"unknown op {op}"}
 
     def _dag_delta(self, dag: str, since: int) -> dict:
