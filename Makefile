@@ -1,16 +1,21 @@
 # Repo tooling. `make bench` refreshes the committed BENCH_*.json perf
-# trajectory (run it in any PR that touches the control plane); `make test`
-# is the tier-1 gate.
+# trajectory (run it in any PR that touches the control or data plane);
+# `make test` is the tier-1 gate; `make bench-check` is the CI hook that
+# re-runs the sweeps and fails on a >20% flatness/gain regression against
+# the committed trajectory.
 
 PYTHONPATH := src
 
-.PHONY: test bench bench-all
+.PHONY: test bench bench-all bench-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane
 
 bench-all:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json
+
+bench-check:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check

@@ -1,0 +1,131 @@
+"""Perf-regression gate (``make bench-check``): re-run the benchmark sweeps
+and compare against the committed ``BENCH_<suite>.json`` trajectory.
+
+Two kinds of gated numbers, discovered generically anywhere in the payload:
+
+  * ``flatness`` dicts — scaling ratios, LOWER is better. A fresh ratio more
+    than 20% above the committed one fails.
+  * ``gains`` dicts — batching/overhaul multipliers, HIGHER is better. A
+    fresh gain more than 20% below the committed one fails.
+
+Only ratio-of-ratios is compared — absolute microseconds/walltimes vary with
+the host, the growth shape does not. Suites without a committed file (or
+without ``run_json``) are skipped.
+
+  PYTHONPATH=src python -m benchmarks.check                 # all gated suites
+  PYTHONPATH=src python -m benchmarks.check pipeline_plane  # one suite
+  ... --dir DIR   # where the committed BENCH_*.json live (default ".")
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import traceback
+from typing import Dict, List, Tuple
+
+GATED_SUITES = ("control_plane", "pipeline_plane")
+TOLERANCE = 1.2          # a gated number may move 20% the wrong way
+
+
+def _collect(payload, path="") -> List[Tuple[str, str, float]]:
+    """(path, direction, value) for every number under a flatness/gains dict."""
+    out: List[Tuple[str, str, float]] = []
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if k in ("flatness", "gains") and isinstance(v, dict):
+                direction = "lower" if k == "flatness" else "higher"
+                for name, num in v.items():
+                    if isinstance(num, (int, float)):
+                        out.append((f"{sub}.{name}", direction, float(num)))
+            else:
+                out.extend(_collect(v, sub))
+    elif isinstance(payload, list):
+        for i, v in enumerate(payload):
+            out.extend(_collect(v, f"{path}[{i}]"))
+    return out
+
+
+def _incomplete_runs(payload, path="") -> List[str]:
+    """Paths of result rows carrying ``"ok": False`` — a stalled sweep issues
+    FEWER RPCs per task, which would otherwise make the ratios look better."""
+    out: List[str] = []
+    if isinstance(payload, dict):
+        if payload.get("ok") is False:
+            out.append(path or "<root>")
+        for k, v in payload.items():
+            out.extend(_incomplete_runs(v, f"{path}.{k}" if path else str(k)))
+    elif isinstance(payload, list):
+        for i, v in enumerate(payload):
+            out.extend(_incomplete_runs(v, f"{path}[{i}]"))
+    return out
+
+
+def check_suite(name: str, committed_dir: str) -> List[str]:
+    """Return a list of failure messages (empty = pass) for one suite."""
+    committed_path = os.path.join(committed_dir, f"BENCH_{name}.json")
+    if not os.path.exists(committed_path):
+        print(f"{name}: no committed {committed_path}, skipping")
+        return []
+    with open(committed_path) as f:
+        committed = json.load(f)
+    baseline = {p: (d, v) for p, d, v in _collect(committed)}
+    if not baseline:
+        print(f"{name}: committed payload has no gated ratios, skipping")
+        return []
+    mod = __import__(f"benchmarks.{name}", fromlist=["run_json"])
+    fresh_payload = mod.run_json()
+    fresh = {p: v for p, _, v in _collect(fresh_payload)}
+    failures: List[str] = [
+        f"{name}: run did not complete (ok=false) at {p}"
+        for p in _incomplete_runs(fresh_payload)]
+    for path, (direction, committed_v) in sorted(baseline.items()):
+        fresh_v = fresh.get(path)
+        if fresh_v is None:
+            failures.append(f"{name}: {path} missing from fresh run")
+            continue
+        if direction == "lower":
+            ok = fresh_v <= committed_v * TOLERANCE
+        else:
+            ok = fresh_v >= committed_v / TOLERANCE
+        status = "ok" if ok else "REGRESSED"
+        print(f"{name}: {path} committed={committed_v:.4g} "
+              f"fresh={fresh_v:.4g} ({direction} is better) {status}")
+        if not ok:
+            failures.append(
+                f"{name}: {path} regressed >20%: committed {committed_v:.4g} "
+                f"-> fresh {fresh_v:.4g}")
+    return failures
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    committed_dir = "."
+    if "--dir" in argv:
+        i = argv.index("--dir")
+        if i + 1 >= len(argv):
+            print("usage: --dir requires a directory argument",
+                  file=sys.stderr)
+            return 2
+        committed_dir = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    suites = argv or GATED_SUITES
+    failures: List[str] = []
+    for name in suites:
+        try:
+            failures += check_suite(name, committed_dir)
+        except Exception:                    # noqa: BLE001
+            failures.append(f"{name}: check crashed")
+            traceback.print_exc()
+    if failures:
+        print("\nbench-check FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nbench-check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,17 @@ batches are synchronous singletons and behavior is unchanged.
 ``submit_many`` amortizes admission over a batch: the min-load block of
 ``_load_order`` is computed once and unconstrained jobs round-robin across it
 without re-probing per job.
+
+Depth-aware placement (the data-plane overhaul): the broker publishes
+per-queue ``{"ready", "inflight"}`` depth under ``/queues/<name>`` (via the
+pipeline composer's sweep-cadence publisher), and the dispatcher keeps a
+materialized ``_queue_depth`` view of it. A job that declares the queues its
+workers will consume (``tags={"queues": [...]}`` — a worker-pod job) is
+placed on the eligible cluster whose capabilities cover the deepest matching
+backlog: ready tasks in a compliance queue can only be drained by workers on
+clusters holding those capability tags, so placement follows the backlog.
+Ties (including "no depth telemetry yet") fall back to least-load, so the
+bias degrades to plain least-loaded placement when queues are empty.
 """
 from __future__ import annotations
 
@@ -84,6 +95,7 @@ class Dispatcher:
         self._jobs_by_cluster: Dict[str, Set[str]] = {}
         self._status: Dict[str, dict] = {}
         self._running: Set[str] = set()
+        self._queue_depth: Dict[str, dict] = {}
         self._straggler_rules: Dict[str, RoutingRule] = {}
         self._down_callbacks: List[Callable[[str], None]] = []
         # failure detector + view maintenance: subscribe (batch form) before
@@ -95,6 +107,7 @@ class Dispatcher:
         # cluster dies would be invisible to recover_cluster_jobs and lost.
         overwatch.watch_batch("/jobs/", self._on_job_batch)
         overwatch.watch_batch("/telemetry/", self._on_telemetry_batch)
+        overwatch.watch_batch("/queues/", self._on_queue_batch)
         overwatch.watch_batch("/clusters/", self._on_cluster_batch)
         self._seed_views()
 
@@ -111,6 +124,9 @@ class Dispatcher:
         for key, val in self.ow.handle(
                 {"op": "range", "prefix": "/jobs/"})["items"].items():
             self._job_put(key, val)
+        for key, val in self.ow.handle(
+                {"op": "range", "prefix": "/queues/"})["items"].items():
+            self._queue_depth[key[len("/queues/"):]] = val
 
     def _cluster_put(self, name: str, info: dict) -> None:
         old = self._clusters.get(name)
@@ -212,6 +228,14 @@ class Dispatcher:
                 self._status.pop(jid, None)
                 self._running.discard(jid)
 
+    def _on_queue_batch(self, events: List[tuple]) -> None:
+        for event, key, value, _rev in events:
+            queue = key[len("/queues/"):]
+            if event == "put":
+                self._queue_depth[queue] = value
+            elif event == "delete":
+                self._queue_depth.pop(queue, None)
+
     def _gc_straggler_rule(self, jid: str) -> None:
         """Satellite fix: straggler rules used to accumulate forever, slowing
         ``candidates()`` for every future job. Drop the rule once the
@@ -231,6 +255,10 @@ class Dispatcher:
     def telemetry(self) -> Dict[str, dict]:
         self.ow.flush_watches()
         return dict(self._telemetry)
+
+    def queue_depths(self) -> Dict[str, dict]:
+        self.ow.flush_watches()
+        return dict(self._queue_depth)
 
     def _agent_addr(self, cluster: str):
         return tuple(self._clusters[cluster]["agent_addr"])
@@ -296,7 +324,8 @@ class Dispatcher:
         self.ow.flush_watches()
         needs = set(job.get("tags", {}).get("requires", ()))
         matched = [r for r in self.rules if r.match(job)]
-        return self._pick(needs, matched)
+        return self._pick(needs, matched,
+                          job.get("tags", {}).get("queues", ()))
 
     def _min_load_hi(self) -> int:
         """End index of the least-loaded tie block: the contiguous,
@@ -307,8 +336,34 @@ class Dispatcher:
         min_load = self._load_order[0][0]
         return bisect.bisect_right(self._load_order, (min_load, "\U0010ffff"))
 
-    def _pick(self, needs: Set[str],
-              matched: List[RoutingRule]) -> Optional[str]:
+    def _pick(self, needs: Set[str], matched: List[RoutingRule],
+              queue_pref=()) -> Optional[str]:
+        if queue_pref:
+            # worker-pod job: deepest matching backlog wins, least-load breaks
+            # ties (and carries the decision when no depth is published yet).
+            # Queue names ARE capability sets (see ``scheduler.queue_for``):
+            # decode each preferred queue's tags + ready depth once, then the
+            # per-cluster loop is just a subset test and a sum.
+            cands = self._eligible(needs, matched)
+            if not cands:
+                return None
+            pref = []
+            for q in queue_pref:
+                ready = self._queue_depth.get(q, {}).get("ready", 0)
+                if ready:
+                    pref.append((set(q.split(",")) if q != "default"
+                                 else set(), ready))
+            best: List[str] = []
+            best_key = None
+            for name in sorted(cands):
+                caps = set(self._clusters[name].get("capabilities", ()))
+                score = sum(r for tags, r in pref if tags <= caps)
+                key = (-score, self._cur_load.get(name, 0.0))
+                if best_key is None or key < best_key:
+                    best_key, best = key, [name]
+                elif key == best_key:
+                    best.append(name)
+            return best[next(self._rr) % len(best)]
         if not needs and not matched:
             # unconstrained job: every cluster is eligible — index the tie
             # block directly, no list materialization on the per-job path
@@ -359,9 +414,10 @@ class Dispatcher:
         The min-load block at the front of ``_load_order`` is computed once;
         unconstrained jobs round-robin across it with no per-job re-probe
         (telemetry cannot move mid-batch — loads only change via heartbeats,
-        which land between fabric ticks). Constrained jobs (capability tags or
-        matching routing rules) fall back to a per-job ``pick()``. Returns the
-        chosen cluster per job, in submission order.
+        which land between fabric ticks). Constrained jobs (capability tags,
+        matching routing rules, or a queue-depth placement preference) fall
+        back to a per-job ``pick()``. Returns the chosen cluster per job, in
+        submission order.
         """
         self.ow.flush_watches()
         placed: List[str] = []
@@ -369,7 +425,8 @@ class Dispatcher:
         for job in jobs:
             needs = set(job.get("tags", {}).get("requires", ()))
             matched = [r for r in self.rules if r.match(job)]
-            if not needs and not matched:
+            queue_pref = job.get("tags", {}).get("queues", ())
+            if not needs and not matched and not queue_pref:
                 while True:
                     if block is None:
                         hi = self._min_load_hi()
@@ -385,7 +442,7 @@ class Dispatcher:
                     # and re-probe
                     block = None
             else:
-                cluster = self._pick(needs, matched)
+                cluster = self._pick(needs, matched, queue_pref)
                 if cluster is None:
                     raise RuntimeError(
                         f"no eligible cluster for job {job['job_id']} "
@@ -403,7 +460,7 @@ class Dispatcher:
                 # of the batch stay placed.
                 self.ow.flush_watches()
                 block = None
-                cluster = self._pick(needs, matched)
+                cluster = self._pick(needs, matched, queue_pref)
                 if cluster is None:
                     raise RuntimeError(
                         f"no eligible cluster for job {job['job_id']} "

@@ -1,52 +1,193 @@
 """Message broker (the redis of paper §5) — named FIFO queues with lease-style
 redelivery: a pulled message is invisible until acked or its lease expires
 (worker died mid-task -> the task instance is redelivered, not lost).
+
+Batched protocol (the data-plane throughput overhaul): alongside the original
+per-message ops (``push``/``pull``/``ack``/``nack``/``depth``) the broker
+speaks batch ops that amortize one round-trip over many messages:
+
+  * ``push_many(queue, msgs)``   — enqueue a whole ready frontier in one RPC;
+  * ``pull_many(queue, max_n)``  — a worker drains up to ``max_n`` task
+    instances per round-trip (partial fills are fine, empty queues return
+    empty lists);
+  * ``ack_many(tags)``           — one commit acknowledges a whole executed
+    batch (idempotent: unknown/already-acked tags are skipped);
+  * ``depth_many(queues?)``      — one probe reads every queue's depth.
+
+Lease bookkeeping is O(log n): pulls push ``(expires_at, tag)`` onto a
+lazy-deletion min-heap (acked tags leave stale heap entries that are skipped
+when popped), so every op pays one heap peek instead of the old full
+``inflight`` scan — the same structure the overwatch lease table uses.
+
+Depth telemetry is truthful: ``depth`` reports ``(ready, inflight)`` — the
+messages waiting in the queue AND the ones leased out to workers — and
+``changed_depths()`` yields only queues whose counts moved since the last
+call, so a sweep-cadence publisher (the composer) writes coalesce-friendly
+``/queues/<name>`` deltas into the overwatch instead of re-putting every
+queue every tick.
+
+Redelivery keeps the message dict — ``try`` metadata included — byte-for-byte
+intact. By default an expired or nacked message re-enters its queue at the
+BACK (FIFO arrival order); the old always-``appendleft`` behavior starved the
+queue head under churn, because every redelivery jumped ahead of messages
+that had been waiting longer. ``requeue_front=True`` (per-broker, or per-op
+on ``nack``) restores jump-the-queue redelivery where lower redelivery
+latency matters more than fairness.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
-from collections import deque
-from typing import Deque, Dict, Tuple
+from collections import Counter, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 
 class Broker:
-    def __init__(self, clock_fn=None, lease: float = 30.0):
+    def __init__(self, clock_fn=None, lease: float = 30.0,
+                 requeue_front: bool = False):
         self.queues: Dict[str, Deque[dict]] = {}
+        # tag -> (queue, msg, expires_at); tags are unique per pull, so a heap
+        # entry is stale iff its tag is gone from this table
         self.inflight: Dict[int, Tuple[str, dict, float]] = {}
+        self._expiry_heap: List[Tuple[float, int]] = []
+        self._inflight_count: Counter = Counter()    # per-queue leased-out
         self._tag = itertools.count(1)
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.lease = lease
+        self.requeue_front = requeue_front
+        self.op_counts: Counter = Counter()          # per-op RPC accounting
+        self.stats: Counter = Counter()              # expire_scanned/redelivered
+        self._depth_dirty: set = set()
+        self._published: Dict[str, Tuple[int, int]] = {}
 
+    # ------------------------------------------------------------------ leases
     def _expire(self) -> None:
-        now = self.clock_fn()
-        for tag, (q, msg, t) in list(self.inflight.items()):
-            if now - t > self.lease:
-                del self.inflight[tag]
-                self.queues.setdefault(q, deque()).appendleft(msg)
+        """Pop due leases off the min-heap and redeliver their messages.
 
+        O(expired · log n): a peek when nothing is due — never a scan of the
+        live ``inflight`` table. ``stats['expire_scanned']`` counts heap pops
+        so tests can pin the no-scan property.
+        """
+        now = self.clock_fn()
+        heap = self._expiry_heap
+        while heap and heap[0][0] < now:
+            _, tag = heapq.heappop(heap)
+            self.stats["expire_scanned"] += 1
+            rec = self.inflight.pop(tag, None)
+            if rec is None:
+                continue                     # stale entry (acked) — lazy delete
+            queue, msg, _ = rec
+            self._requeue(queue, msg, self.requeue_front)
+            self.stats["redelivered"] += 1
+
+    def _requeue(self, queue: str, msg: dict, front: bool) -> None:
+        q = self.queues.setdefault(queue, deque())
+        if front:
+            q.appendleft(msg)
+        else:
+            q.append(msg)
+        self._inflight_count[queue] -= 1
+        self._depth_dirty.add(queue)
+
+    # ------------------------------------------------------------- op helpers
+    def _push(self, queue: str, msg: dict) -> None:
+        self.queues.setdefault(queue, deque()).append(msg)
+        self._depth_dirty.add(queue)
+
+    def _pull_one(self, queue: str) -> Optional[Tuple[dict, int]]:
+        q = self.queues.get(queue)
+        if not q:
+            return None
+        item = q.popleft()
+        tag = next(self._tag)
+        expires = self.clock_fn() + self.lease
+        self.inflight[tag] = (queue, item, expires)
+        heapq.heappush(self._expiry_heap, (expires, tag))
+        self._inflight_count[queue] += 1
+        self._depth_dirty.add(queue)
+        return item, tag
+
+    def _ack_one(self, tag) -> bool:
+        rec = self.inflight.pop(tag, None)
+        if rec is None:
+            return False                     # idempotent: unknown/double ack
+        self._inflight_count[rec[0]] -= 1
+        self._depth_dirty.add(rec[0])
+        return True
+
+    def _depth_of(self, queue: str) -> Tuple[int, int]:
+        return (len(self.queues.get(queue) or ()),
+                self._inflight_count.get(queue, 0))
+
+    # ------------------------------------------------------------ service API
     def handle(self, msg: dict) -> dict:
         op = msg.get("op")
+        self.op_counts[op] += 1
         self._expire()
         if op == "push":
-            self.queues.setdefault(msg["queue"], deque()).append(msg["msg"])
+            self._push(msg["queue"], msg["msg"])
             return {"ok": True, "depth": len(self.queues[msg["queue"]])}
+        if op == "push_many":
+            q = self.queues.setdefault(msg["queue"], deque())
+            q.extend(msg["msgs"])
+            self._depth_dirty.add(msg["queue"])
+            return {"ok": True, "depth": len(q)}
         if op == "pull":
-            q = self.queues.get(msg["queue"])
-            if not q:
+            got = self._pull_one(msg["queue"])
+            if got is None:
                 return {"ok": True, "msg": None}
-            item = q.popleft()
-            tag = next(self._tag)
-            self.inflight[tag] = (msg["queue"], item, self.clock_fn())
-            return {"ok": True, "msg": item, "tag": tag}
+            return {"ok": True, "msg": got[0], "tag": got[1]}
+        if op == "pull_many":
+            msgs: List[dict] = []
+            tags: List[int] = []
+            for _ in range(max(int(msg.get("max_n", 1)), 0)):
+                got = self._pull_one(msg["queue"])
+                if got is None:
+                    break
+                msgs.append(got[0])
+                tags.append(got[1])
+            return {"ok": True, "msgs": msgs, "tags": tags}
         if op == "ack":
-            self.inflight.pop(msg.get("tag"), None)
+            self._ack_one(msg.get("tag"))
             return {"ok": True}
+        if op == "ack_many":
+            acked = sum(1 for t in msg.get("tags", ()) if self._ack_one(t))
+            return {"ok": True, "acked": acked}
         if op == "nack":
             rec = self.inflight.pop(msg.get("tag"), None)
             if rec:
-                self.queues.setdefault(rec[0], deque()).appendleft(rec[1])
+                front = msg.get("requeue_front")
+                self._requeue(rec[0], rec[1],
+                              self.requeue_front if front is None else front)
             return {"ok": True}
         if op == "depth":
-            return {"ok": True,
-                    "depth": len(self.queues.get(msg["queue"], ()))}
+            ready, inflight = self._depth_of(msg["queue"])
+            return {"ok": True, "depth": ready,
+                    "ready": ready, "inflight": inflight}
+        if op == "depth_many":
+            queues = msg.get("queues")
+            if queues is None:
+                queues = sorted(set(self.queues) | set(self._inflight_count))
+            depths = {}
+            for q in queues:
+                ready, inflight = self._depth_of(q)
+                depths[q] = {"ready": ready, "inflight": inflight}
+            return {"ok": True, "depths": depths}
         return {"ok": False, "error": f"unknown op {op}"}
+
+    # ------------------------------------------------------- depth publication
+    def changed_depths(self) -> Dict[str, dict]:
+        """(ready, inflight) for queues whose counts moved since the last call
+        — the sweep-cadence feed a publisher writes under ``/queues/<name>``.
+        Queues whose dirty ops netted out to the last-published counts are
+        skipped, keeping the watch stream quiet on steady state.
+        """
+        self._expire()
+        out: Dict[str, dict] = {}
+        for q in sorted(self._depth_dirty):
+            cur = self._depth_of(q)
+            if self._published.get(q) != cur:
+                self._published[q] = cur
+                out[q] = {"ready": cur[0], "inflight": cur[1]}
+        self._depth_dirty.clear()
+        return out

@@ -8,6 +8,19 @@ workers on private partitions consume the master-hosted broker/DB purely
 through gateway routes — Figure 3 of the paper, reproduced as a test (see
 tests/test_pipelines.py, which also asserts the ACLs block any pod NOT in the
 dependency graph).
+
+The composer also drives the broker's depth telemetry: on a sweep cadence
+(``depth_publish_every`` fabric-clock units, only queues whose counts moved)
+it publishes ``{"ready", "inflight"}`` under ``/queues/<name>`` in the
+overwatch via the master agent, which feeds the dispatcher's materialized
+queue-depth view — the "place workers near deep queues" loop.
+
+``pipelined=True`` (default) runs the batched data plane end to end: the
+scheduler coalesces each tick's frontier into one ``upsert_many`` plus one
+``push_many`` per queue, and workers drain ``worker_batch`` tasks per
+``pull_many`` and commit through ``upsert_many``/``ack_many``.
+``pipelined=False`` keeps the seed's per-task protocol (4+ RPCs per task) —
+the two produce identical terminal taskdb states.
 """
 from __future__ import annotations
 
@@ -46,7 +59,9 @@ def composer_appspec(master: str,
 class HybridComposer:
     def __init__(self, plane: ManagementPlane,
                  workers: Dict[str, Sequence[str]],
-                 worker_queues: Optional[Dict[str, Tuple[str, ...]]] = None):
+                 worker_queues: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 worker_batch: int = 16, pipelined: bool = True,
+                 depth_publish_every: float = 1.0):
         self.plane = plane
         self.spec = composer_appspec(plane.master, workers)
         plane.upload_spec(self.spec)
@@ -61,7 +76,8 @@ class HybridComposer:
                         self.taskdb.handle)
 
         sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
-        self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock)
+        self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
+                                   batched=pipelined)
 
         self.workers: List[PipelineWorker] = []
         for cluster, names in workers.items():
@@ -70,7 +86,10 @@ class HybridComposer:
                 client = ServiceClient(fabric, state, w)
                 queues = (worker_queues or {}).get(w, ("default",))
                 self.workers.append(PipelineWorker(
-                    client, w, queues=queues, clock_fn=lambda: fabric.clock))
+                    client, w, queues=queues, clock_fn=lambda: fabric.clock,
+                    batch=worker_batch, pipelined=pipelined))
+        self.depth_publish_every = depth_publish_every
+        self._depth_published_at: Optional[float] = None
 
     # ------------------------------------------------------------------- user API
     def add_dag(self, dag: DAG) -> None:
@@ -80,13 +99,36 @@ class HybridComposer:
         self.scheduler.tick()
         for w in self.workers:
             w.tick()
+        self.publish_queue_depths()
         self.plane.tick()
+
+    # ------------------------------------------------------------ depth telemetry
+    def publish_queue_depths(self) -> None:
+        """Sweep-cadence depth publication: at most once per
+        ``depth_publish_every`` fabric-clock units, put the (ready, inflight)
+        counts of every queue whose depth changed under ``/queues/<name>`` —
+        a handful of coalesce-friendly puts, not one per queue per tick."""
+        now = self.plane.fabric.clock
+        if (self._depth_published_at is not None
+                and now - self._depth_published_at < self.depth_publish_every):
+            return
+        self._depth_published_at = now
+        ow = self.plane.master_agent.ow
+        for queue, depth in self.broker.changed_depths().items():
+            ow.put(f"/queues/{queue}", {**depth, "clock": now})
 
     def run_dag(self, dag_id: str, max_ticks: int = 500) -> bool:
         for _ in range(max_ticks):
             self.tick()
-            if self.scheduler.dag_done(dag_id):
-                return self.scheduler.dag_success(dag_id)
+            # probe-free doneness: the next tick's shared probe folds in any
+            # commits this tick's workers made, so the check lags by at most
+            # one tick instead of paying a second delta RPC every tick
+            if self.scheduler.dag_done(dag_id, probe=False):
+                return self.scheduler.dag_success(dag_id, probe=False)
+        # budget exhausted: one probed check so a DAG finishing on the very
+        # last tick isn't misreported by the one-tick observation lag
+        if self.scheduler.dag_done(dag_id):
+            return self.scheduler.dag_success(dag_id, probe=False)
         return False
 
     def status(self, dag_id: str) -> Dict[str, str]:

@@ -5,10 +5,15 @@ eval / export / custom python), a payload, and optional placement constraints
 (``requires`` capability tags — the paper's compliance routing). A ``DAG``
 validates acyclicity and yields ready sets; scheduling/execution live in
 scheduler.py / worker.py.
+``DAG`` precomputes the downstream adjacency (``children``) once at
+construction, so validation, topological order and failure propagation are
+O(V + E) — the seed rescanned every task per visited node, which is quadratic
+and unusable at the 50k-task scale the pipeline benchmarks run at.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
@@ -31,6 +36,9 @@ class DAG:
             if t.name in self.tasks:
                 raise ValueError(f"duplicate task {t.name}")
             self.tasks[t.name] = t
+        # downstream adjacency, one entry per upstream edge occurrence so the
+        # indegree arithmetic matches the declared tuples exactly
+        self.children: Dict[str, List[str]] = {n: [] for n in self.tasks}
         self._validate()
 
     def _validate(self) -> None:
@@ -38,23 +46,23 @@ class DAG:
             for u in t.upstream:
                 if u not in self.tasks:
                     raise ValueError(f"{t.name} depends on unknown task {u}")
+                self.children[u].append(t.name)
         order = self.topological_order()
         if len(order) != len(self.tasks):
             raise ValueError(f"cycle in DAG {self.dag_id}")
 
     def topological_order(self) -> List[str]:
         indeg = {n: len(t.upstream) for n, t in self.tasks.items()}
-        ready = sorted(n for n, d in indeg.items() if d == 0)
+        ready = [n for n, d in indeg.items() if d == 0]
+        heapq.heapify(ready)                 # name order among the ready set
         out: List[str] = []
         while ready:
-            n = ready.pop(0)
+            n = heapq.heappop(ready)
             out.append(n)
-            for m, t in self.tasks.items():
-                if n in t.upstream:
-                    indeg[m] -= 1
-                    if indeg[m] == 0:
-                        ready.append(m)
-            ready.sort()
+            for m in self.children[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    heapq.heappush(ready, m)
         return out
 
     def ready_tasks(self, done: set, running: set, failed: set) -> List[Task]:
@@ -68,12 +76,11 @@ class DAG:
         return sorted(out, key=lambda t: t.name)
 
     def downstream_of(self, name: str) -> set:
-        out, frontier = set(), {name}
-        while frontier:
-            nxt = set()
-            for m, t in self.tasks.items():
-                if m not in out and frontier & set(t.upstream):
+        out: set = set()
+        stack = [name]
+        while stack:
+            for m in self.children[stack.pop()]:
+                if m not in out:
                     out.add(m)
-                    nxt.add(m)
-            frontier = nxt
+                    stack.append(m)
         return out

@@ -8,13 +8,24 @@ workers inside the right partition. Failed tasks are retried up to
 ``Task.retries`` times; tasks downstream of a permanently failed task are
 marked upstream_failed.
 
-Hot path (the scaling overhaul): instead of pulling the full ``dag_state`` for
-every DAG on every tick, the scheduler keeps a cached per-DAG state and asks
-the taskdb only for the *deltas* since its cursors — multiplexed over ALL
-registered DAGs in one ``dag_delta_many`` round-trip per tick. A DAG whose
-tasks did not change and which scheduled nothing last pass is quiescent and
-costs nothing beyond its slice of that single probe — event-driven scheduling
-rather than polling.
+Hot path (the data-plane throughput overhaul): the scheduler is fully
+delta-driven.
+
+  * One ``dag_delta_many`` probe per tick covers every registered DAG (a
+    quiescent DAG costs nothing beyond its slice of that probe).
+  * The per-DAG done/running/failed sets are maintained INCREMENTALLY from
+    those deltas — never rebuilt from the full cached state — and the ready
+    frontier comes from an indegree counter per task (``_undone_up``): when a
+    task succeeds, each direct downstream's counter drops, and a counter
+    hitting zero promotes the task into the candidate set. Scheduling work is
+    O(changed tasks) per tick, not O(DAG size).
+  * Placement is coalesced: each tick flushes ONE taskdb ``upsert_many``
+    carrying every queued/retry/upstream_failed row plus ONE broker
+    ``push_many`` per target queue — 2 RPCs per tick per active DAG instead
+    of 2 per task (``batched=False`` keeps the per-task protocol for
+    equivalence tests and the benchmark baseline).
+  * ``dag_status``/``dag_done``/``dag_success`` read the cached ``_state``,
+    refreshed by the same delta probe — no full ``dag_state`` dump per call.
 """
 from __future__ import annotations
 
@@ -31,98 +42,223 @@ def queue_for(task: Task) -> str:
 
 
 class Scheduler:
-    def __init__(self, client: ServiceClient, clock_fn=None):
+    def __init__(self, client: ServiceClient, clock_fn=None,
+                 batched: bool = True):
         self.client = client
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
+        self.batched = batched
         self._state: Dict[str, Dict[str, dict]] = {}   # cached latest rows
         self._cursor: Dict[str, int] = {}
         self._quiescent: Set[str] = set()
+        # ---------------- incrementally maintained per-DAG scheduling state
+        self._done: Dict[str, Set[str]] = {}
+        self._running: Dict[str, Set[str]] = {}        # queued or running
+        self._failed: Dict[str, Set[str]] = {}         # permanent (incl. upstream)
+        self._retry_pending: Dict[str, Dict[str, int]] = {}  # task -> next try
+        self._fail_new: Dict[str, Set[str]] = {}       # to propagate downstream
+        self._undone_up: Dict[str, Dict[str, int]] = {}  # not-yet-done upstreams
+        self._candidates: Dict[str, Set[str]] = {}     # all upstreams done
 
     def add_dag(self, dag: DAG) -> None:
-        self.dags[dag.dag_id] = dag
-        self._state.setdefault(dag.dag_id, {})
-        self._cursor.setdefault(dag.dag_id, 0)
-        self._quiescent.discard(dag.dag_id)
+        did = dag.dag_id
+        self.dags[did] = dag
+        self._state.setdefault(did, {})
+        self._cursor.setdefault(did, 0)
+        self._quiescent.discard(did)
+        self._done.setdefault(did, set())
+        self._running.setdefault(did, set())
+        self._failed.setdefault(did, set())
+        self._retry_pending.setdefault(did, {})
+        self._fail_new.setdefault(did, set())
+        undone = {n: len(t.upstream) for n, t in dag.tasks.items()}
+        self._undone_up.setdefault(did, undone)
+        self._candidates.setdefault(
+            did, {n for n, d in undone.items() if d == 0})
 
-    # -------------------------------------------------------------------- one tick
-    def tick(self) -> List[str]:
-        scheduled: List[str] = []
-        if not self.dags:
-            return scheduled
-        # one multiplexed delta probe for every registered DAG
+    # ------------------------------------------------------------ delta intake
+    def _apply_rows(self, dag: DAG, changed: Dict[str, dict]) -> None:
+        """Fold a taskdb delta into the incremental scheduling sets.
+
+        Pure state tracking — no RPCs. Scheduling side effects (enqueueing
+        retries, propagating failures) are staged in ``_retry_pending`` /
+        ``_fail_new`` and drained by ``_schedule_dag`` so that an observation
+        probe (``dag_status``) can consume deltas without scheduling.
+        """
+        did = dag.dag_id
+        self._state[did].update(changed)
+        done = self._done[did]
+        running = self._running[did]
+        failed = self._failed[did]
+        candidates = self._candidates[did]
+        undone = self._undone_up[did]
+        retry = self._retry_pending[did]
+        for t, r in changed.items():
+            if t not in dag.tasks:
+                continue
+            s = r.get("status")
+            if s == "success":
+                if t in done:
+                    continue
+                done.add(t)
+                running.discard(t)
+                candidates.discard(t)
+                retry.pop(t, None)
+                # a retry can outrace a same-tick upstream_failed mark; the
+                # success row wins (it is the higher try), so the sets agree
+                failed.discard(t)
+                for d in dag.children[t]:
+                    undone[d] -= 1
+                    if undone[d] == 0 and d not in done and d not in failed:
+                        candidates.add(d)
+            elif s in ("queued", "running"):
+                if t not in done and t not in failed:
+                    running.add(t)
+                    candidates.discard(t)
+            elif s == "failed":
+                running.discard(t)
+                if t in done or t in failed:
+                    continue
+                if r["try"] < dag.tasks[t].retries + 1:
+                    retry[t] = r["try"] + 1
+                else:
+                    failed.add(t)
+                    candidates.discard(t)
+                    retry.pop(t, None)
+                    self._fail_new[did].add(t)
+            elif s == "upstream_failed":
+                running.discard(t)
+                candidates.discard(t)
+                retry.pop(t, None)
+                if t not in done:
+                    failed.add(t)
+
+    def _probe(self) -> Dict[str, Dict[str, dict]]:
+        """One multiplexed delta round-trip for every registered DAG."""
         resp = self.client.call("taskdb", {
             "op": "dag_delta_many",
             "dags": {d: self._cursor.get(d, 0) for d in self.dags}})
         deltas = resp["deltas"]
         cursor = resp["cursor"]
         for dag in self.dags.values():
-            changed = deltas.get(dag.dag_id, {})
             self._cursor[dag.dag_id] = cursor
-            state = self._state.setdefault(dag.dag_id, {})
-            state.update(changed)
-            if not changed and dag.dag_id in self._quiescent:
-                continue                      # nothing moved, frontier unchanged
-            n_before = len(scheduled)
-            self._schedule_dag(dag, state, scheduled)
-            if len(scheduled) == n_before:
-                self._quiescent.add(dag.dag_id)
-            else:
+            changed = deltas.get(dag.dag_id, {})
+            if changed:
+                self._apply_rows(dag, changed)
+                # state moved: the next tick must re-examine this DAG even
+                # though its delta was consumed here (observation probes and
+                # scheduling ticks share one cursor)
                 self._quiescent.discard(dag.dag_id)
+        return deltas
+
+    # -------------------------------------------------------------------- one tick
+    def tick(self) -> List[str]:
+        scheduled: List[str] = []
+        if not self.dags:
+            return scheduled
+        deltas = self._probe()
+        for dag in self.dags.values():
+            did = dag.dag_id
+            if (did in self._quiescent and not deltas.get(did)
+                    and not self._retry_pending[did]
+                    and not self._fail_new[did]):
+                continue                  # nothing moved, frontier unchanged
+            n_before = len(scheduled)
+            self._schedule_dag(dag, scheduled)
+            if len(scheduled) == n_before:
+                self._quiescent.add(did)
+            else:
+                self._quiescent.discard(did)
         return scheduled
 
-    def _schedule_dag(self, dag: DAG, state: Dict[str, dict],
-                      scheduled: List[str]) -> None:
-        done = {t for t, r in state.items() if r.get("status") == "success"}
-        running = {t for t, r in state.items()
-                   if r.get("status") in ("queued", "running")}
-        failed = set()
-        for t, r in state.items():
-            if r.get("status") == "failed":
-                task = dag.tasks[t]
-                if r["try"] < task.retries + 1:
-                    self._enqueue(dag, task, r["try"] + 1)
-                    running.add(t)
-                    scheduled.append(f"{dag.dag_id}.{t}#retry{r['try']+1}")
-                else:
-                    failed.add(t)
-            elif r.get("status") == "upstream_failed":
-                failed.add(t)
-        # propagate permanent failure downstream
-        for t in sorted(failed):
-            for d in dag.downstream_of(t):
-                if d not in done and d not in failed:
-                    self.client.call("taskdb", {
-                        "op": "upsert", "dag": dag.dag_id, "task": d,
-                        "try": 1, "status": "upstream_failed",
-                        "clock": self.clock_fn()})
-                    failed.add(d)
-        for task in dag.ready_tasks(done, running, failed):
-            self._enqueue(dag, task, 1)
-            scheduled.append(f"{dag.dag_id}.{task.name}")
+    def _schedule_dag(self, dag: DAG, scheduled: List[str]) -> None:
+        did = dag.dag_id
+        clock = self.clock_fn()
+        rows: List[dict] = []
+        pushes: Dict[str, List[dict]] = {}
+        done, running = self._done[did], self._running[did]
+        failed, candidates = self._failed[did], self._candidates[did]
+        # retries first, so a retrying task is marked running before the
+        # frontier below could mistake it for never-scheduled
+        retries, self._retry_pending[did] = self._retry_pending[did], {}
+        for t in sorted(retries):
+            self._stage(did, dag.tasks[t], retries[t], clock, rows, pushes)
+            running.add(t)
+            scheduled.append(f"{did}.{t}#retry{retries[t]}")
+        # propagate permanent failure downstream (transitively, so only the
+        # originally failed task needs walking)
+        fail_new, self._fail_new[did] = self._fail_new[did], set()
+        for t in sorted(fail_new):
+            for d in sorted(dag.downstream_of(t)):
+                if d in done or d in failed:
+                    continue
+                # d can never hold a pending retry here: a task downstream of
+                # a newly permanently-failed task was never schedulable, and
+                # _apply_rows refuses retries for tasks already in ``failed``
+                failed.add(d)
+                candidates.discard(d)
+                rows.append({"dag": did, "task": d, "try": 1,
+                             "status": "upstream_failed", "clock": clock})
+        # ready frontier: candidates are maintained by the indegree counters;
+        # running/failed membership is already kept out of the set, the
+        # difference below only guards same-tick transitions
+        for t in sorted(candidates - running - failed - done):
+            self._stage(did, dag.tasks[t], 1, clock, rows, pushes)
+            running.add(t)
+            candidates.discard(t)
+            scheduled.append(f"{did}.{t}")
+        self._flush(rows, pushes)
 
-    def _enqueue(self, dag: DAG, task: Task, try_n: int) -> None:
-        self.client.call("taskdb", {"op": "upsert", "dag": dag.dag_id,
-                                    "task": task.name, "try": try_n,
-                                    "status": "queued",
-                                    "clock": self.clock_fn()})
-        self.client.call("broker", {"op": "push", "queue": queue_for(task),
-                                    "msg": {"dag": dag.dag_id,
-                                            "task": task.name,
-                                            "kind": task.kind,
-                                            "payload": task.payload,
-                                            "try": try_n}})
+    def _stage(self, did: str, task: Task, try_n: int, clock: float,
+               rows: List[dict], pushes: Dict[str, List[dict]]) -> None:
+        rows.append({"dag": did, "task": task.name, "try": try_n,
+                     "status": "queued", "clock": clock})
+        pushes.setdefault(queue_for(task), []).append(
+            {"dag": did, "task": task.name, "kind": task.kind,
+             "payload": task.payload, "try": try_n})
+
+    def _flush(self, rows: List[dict],
+               pushes: Dict[str, List[dict]]) -> None:
+        """Commit the tick's staged work: rows before pushes, so no worker can
+        pull a task instance whose queued row is not yet visible."""
+        if self.batched:
+            if rows:
+                self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
+            for queue in sorted(pushes):
+                self.client.call("broker", {"op": "push_many", "queue": queue,
+                                            "msgs": pushes[queue]})
+            return
+        for row in rows:
+            self.client.call("taskdb", {"op": "upsert", **row})
+        for queue in sorted(pushes):
+            for m in pushes[queue]:
+                self.client.call("broker", {"op": "push", "queue": queue,
+                                            "msg": m})
 
     # ------------------------------------------------------------------ observation
     def dag_status(self, dag_id: str) -> Dict[str, str]:
-        state = self.client.call("taskdb", {"op": "dag_state",
-                                            "dag": dag_id})["tasks"]
-        dag = self.dags[dag_id]
+        """Cached-state read: one shared delta probe, never a ``dag_state``
+        round-trip — the cache is exactly as fresh as the probe's cursor."""
+        self._probe()
+        state = self._state.get(dag_id, {})
         return {t: state.get(t, {}).get("status", "pending")
-                for t in dag.tasks}
+                for t in self.dags[dag_id].tasks}
 
-    def dag_done(self, dag_id: str) -> bool:
-        return all(s in TERMINAL for s in self.dag_status(dag_id).values())
+    def dag_done(self, dag_id: str, probe: bool = True) -> bool:
+        """O(1) after the probe: the incremental done/failed sets partition
+        the terminal tasks (``failed`` includes upstream_failed).
 
-    def dag_success(self, dag_id: str) -> bool:
-        return all(s == "success" for s in self.dag_status(dag_id).values())
+        ``probe=False`` skips the delta round-trip and answers from the sets
+        as of the last probe — right for a driver loop that just ticked
+        (doneness then lags commits by at most one tick, and terminal states
+        never regress), wrong for a caller needing read-your-writes."""
+        if probe:
+            self._probe()
+        dag = self.dags[dag_id]
+        return (len(self._done[dag_id]) + len(self._failed[dag_id])
+                == len(dag.tasks))
+
+    def dag_success(self, dag_id: str, probe: bool = True) -> bool:
+        if probe:
+            self._probe()
+        return len(self._done[dag_id]) == len(self.dags[dag_id].tasks)

@@ -6,6 +6,12 @@ is how a *pod* (worker/scheduler) dials a service BY NAME: it resolves the
 local DNS entry (Algorithm 1) and sends on the fabric — the route tables,
 channels and ACLs (Algorithms 2-4) do the rest. Pods never know where a
 service actually lives; that is the paper's seamless-partitioning claim.
+
+Requests ride ``Envelope`` payloads: a batched request (``push_many`` /
+``upsert_many`` carrying a whole frontier or commit batch) crosses several
+fabric hops between a private worker and the master-hosted services, and the
+envelope caches its byte size so the ledger walks the batch once, not once
+per hop.
 """
 from __future__ import annotations
 
@@ -13,7 +19,7 @@ from typing import Callable
 
 from repro.core import gateways as GW
 from repro.core.service_graph import AppSpec
-from repro.core.transport import DeliveryError, Fabric
+from repro.core.transport import DeliveryError, Envelope, Fabric
 
 
 class ServiceEndpoint:
@@ -38,5 +44,7 @@ class ServiceClient:
             raise DeliveryError(f"no DNS entry for {service} in "
                                 f"{self.state.cluster}")
         addr = self.state.dns[service]
+        if not isinstance(msg, Envelope):
+            msg = Envelope(msg)              # size once, reuse across hops
         return self.fabric.send(self.state.cluster, self.pod,
                                 self.state.cluster, addr, msg)

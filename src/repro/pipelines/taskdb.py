@@ -14,11 +14,16 @@ and a per-DAG change log, so
     per scheduler tick instead of a full state dump;
   * ``dag_delta_many`` multiplexes the deltas of every registered DAG into
     one call — the scheduler pays a single taskdb round-trip per tick no
-    matter how many DAGs it owns.
+    matter how many DAGs it owns;
+  * ``upsert_many`` applies a whole batch of rows (in order) in one
+    round-trip — a worker commits an executed pull batch (running + terminal
+    row per task) and the scheduler commits a whole ready frontier with a
+    single RPC instead of one per row.
 """
 from __future__ import annotations
 
 import bisect
+from collections import Counter
 from typing import Dict, List, Tuple
 
 
@@ -33,6 +38,7 @@ class TaskDB:
         # dag -> append-only [(seq, task)] change log, compacted when it
         # outgrows the task count (bounded memory, cursor-stable)
         self._changes: Dict[str, List[Tuple[int, str]]] = {}
+        self.op_counts: Counter = Counter()          # per-op RPC accounting
 
     def _mark_dirty(self, dag: str, task: str) -> None:
         self._seq += 1
@@ -45,23 +51,34 @@ class TaskDB:
                 last[t] = seq
             log[:] = sorted((s, t) for t, s in last.items())
 
+    def _upsert(self, msg: dict) -> None:
+        key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
+        row = self.rows.setdefault(key, {"dag": msg["dag"],
+                                         "task": msg["task"],
+                                         "try": key[2]})
+        for k in ("status", "worker", "result", "clock", "error"):
+            if k in msg:
+                row[k] = msg[k]
+        latest = self._latest.setdefault(msg["dag"], {})
+        cur = latest.get(msg["task"])
+        if cur is None or key[2] >= cur["try"]:
+            latest[msg["task"]] = row
+        self._mark_dirty(msg["dag"], msg["task"])
+
     # ---------------------------------------------------------------- service API
     def handle(self, msg: dict) -> dict:
         op = msg.get("op")
+        self.op_counts[op] += 1
         if op == "upsert":
-            key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
-            row = self.rows.setdefault(key, {"dag": msg["dag"],
-                                             "task": msg["task"],
-                                             "try": key[2]})
-            for k in ("status", "worker", "result", "clock", "error"):
-                if k in msg:
-                    row[k] = msg[k]
-            latest = self._latest.setdefault(msg["dag"], {})
-            cur = latest.get(msg["task"])
-            if cur is None or key[2] >= cur["try"]:
-                latest[msg["task"]] = row
-            self._mark_dirty(msg["dag"], msg["task"])
+            self._upsert(msg)
             return {"ok": True}
+        if op == "upsert_many":
+            # one batched commit: rows apply in list order, so a worker's
+            # running->terminal pair lands as the same transition sequence the
+            # per-row protocol produced
+            for row in msg["rows"]:
+                self._upsert(row)
+            return {"ok": True, "n": len(msg["rows"])}
         if op == "get":
             key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
             return {"ok": True, "row": self.rows.get(key)}
