@@ -1,0 +1,187 @@
+"""Elastic autoscaling plane: time-to-drain a 50k-task backlog and the
+replica trajectory, autoscaled fleet vs. an optimally-sized static fleet.
+
+Two runs over the same hybrid topology (master + preferred on-prem cluster
+with a capacity quota + public-cloud cluster):
+
+  * ``static``     — ``MAX_REPLICAS`` workers pre-provisioned from tick 0,
+    split across the clusters (the best a hand-sized fleet can do: it knows
+    the final answer in advance);
+  * ``autoscaled`` — ZERO workers at tick 0; the reconciler watches the
+    published ``/queues/default`` depth, ramps the fleet under the policy's
+    step/cooldown limits (filling the on-prem quota first, spilling the rest
+    into the cloud cluster), drains the backlog, then scales back to zero.
+
+Everything is driven by the deterministic fabric clock, so ticks-to-drain
+is the signal (host-independent); wall seconds are recorded for context.
+Gates, recorded under ``flatness`` (lower is better, checked by
+``make bench-check`` against the committed BENCH_autoscale.json):
+
+  * ``drain_ticks_ratio_autoscaled_over_static`` — the elastic fleet must
+    drain the backlog within 1.5x the static fleet's ticks;
+  * ``peak_replicas_frac_of_max`` — provisioning never exceeds the policy's
+    max-replica bound (<= 1.0 by construction; gated so it stays there).
+
+Loss accounting is first-class: every task kind increments a per-task
+counter, and a run is only ``ok`` if every task executed EXACTLY once —
+zero lost, zero double-executed — across every scale-down/drain event, with
+zero broker lease-expiry redeliveries (graceful drains leave no lease to
+expire). The same properties are asserted in tests/test_autoscale.py.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+from typing import List
+
+from repro.autoscale import ScalingPolicy
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.pipelines import DAG, Task, HybridComposer
+
+N_TASKS = 50_000
+WORKER_BATCH = 64
+MAX_REPLICAS = 16
+ONPREM_QUOTA = 8                 # the preferred tier's capacity: half the fleet
+TARGET_DEPTH = 4 * WORKER_BATCH  # one worker per 4 batches of ready backlog
+
+
+def _plane() -> ManagementPlane:
+    plane = ManagementPlane(message_log_limit=1_000, op_log_limit=1_000)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a",
+                      local_plane=SimLocalPlane(caps=("cpu", "onprem")))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    return plane
+
+
+def _backlog_dag(n: int) -> DAG:
+    return DAG("backlog", [Task(f"t{i}", kind="count", payload={"i": i})
+                           for i in range(n)])
+
+
+def run_fleet(autoscaled: bool, n_tasks: int = N_TASKS) -> dict:
+    plane = _plane()
+    counts: Counter = Counter()
+
+    def setup(worker):
+        worker.register(
+            "count", lambda p, _c=counts: {"n": _c.update([p["i"]]) or 1})
+
+    if autoscaled:
+        comp = HybridComposer(plane, workers={}, worker_batch=WORKER_BATCH,
+                              worker_setup=setup)
+        asc = comp.attach_autoscaler(
+            [ScalingPolicy(family="default", queues=("default",),
+                           requires=("cpu",),
+                           target_depth_per_worker=TARGET_DEPTH,
+                           min_replicas=0, max_replicas=MAX_REPLICAS,
+                           scale_up_step=MAX_REPLICAS // 2,
+                           scale_down_step=4,
+                           up_cooldown=1.0, down_cooldown=1.0)],
+            quotas={"onprem-a": ONPREM_QUOTA, "master": 0},
+            preferred=("onprem-a",))
+    else:
+        half = MAX_REPLICAS // 2
+        comp = HybridComposer(
+            plane,
+            workers={"onprem-a": [f"ws-{i}" for i in range(half)],
+                     "cloud-a": [f"ws-{i + half}" for i in range(half)]},
+            worker_batch=WORKER_BATCH, worker_setup=setup)
+        asc = None
+
+    comp.add_dag(_backlog_dag(n_tasks))
+
+    trajectory: List[int] = []
+    ticks_to_drain = None
+    t0 = time.perf_counter()
+    max_ticks = n_tasks // (MAX_REPLICAS * WORKER_BATCH) + 400
+    for tick in range(1, max_ticks + 1):
+        comp.tick()
+        replicas = (asc.replicas("default") if asc is not None
+                    else len(comp.workers))
+        trajectory.append(replicas)
+        if ticks_to_drain is None and comp.scheduler.dag_done("backlog",
+                                                              probe=False):
+            ticks_to_drain = tick
+            if asc is None:
+                break
+        if ticks_to_drain is not None and asc is not None and replicas == 0:
+            break                        # backlog drained AND fleet scaled away
+    wall = time.perf_counter() - t0
+    if ticks_to_drain is None:
+        ticks_to_drain = max_ticks       # never drained: the ratio gate fails
+
+    success = comp.scheduler.dag_success("backlog", probe=False)
+    duplicates = sum(1 for c in counts.values() if c > 1)
+    lost = n_tasks - len(counts)
+    peak = max(trajectory) if trajectory else 0
+    spilled = 0
+    scale_ups = scale_downs = 0
+    if asc is not None:
+        scale_ups = sum(1 for e in asc.events if e[2] == "scale_up")
+        scale_downs = sum(1 for e in asc.events if e[2] == "scale_down")
+        spilled = sum(1 for e in asc.events
+                      if e[2] == "scale_up" and e[4] == "cloud-a")
+    ok = (success and lost == 0 and duplicates == 0
+          and peak <= MAX_REPLICAS
+          and comp.broker.stats.get("redelivered", 0) == 0)
+    return {
+        "mode": "autoscaled" if autoscaled else "static",
+        "tasks": n_tasks, "ok": ok,
+        "ticks_to_drain": ticks_to_drain,
+        "wall_s": wall,
+        "peak_replicas": peak, "max_replicas": MAX_REPLICAS,
+        "end_replicas": trajectory[-1] if trajectory else 0,
+        "trajectory": trajectory,
+        "scale_ups": scale_ups, "scale_downs": scale_downs,
+        "spilled_pods": spilled,
+        "lost": lost, "duplicate_executions": duplicates,
+        "lease_expiry_redeliveries": comp.broker.stats.get("redelivered", 0),
+    }
+
+
+_CACHE: dict = {}
+
+
+def run_sweep() -> dict:
+    if "sweep" in _CACHE:
+        return _CACHE["sweep"]
+    static = run_fleet(autoscaled=False)
+    auto = run_fleet(autoscaled=True)
+    result = {
+        "label": ("queue-depth-driven elastic worker fleet vs. "
+                  "optimally-sized static fleet"),
+        "autoscaled": auto,
+        "static": static,
+        "flatness": {                    # lower is better; gate <= 1.5 / 1.0
+            "drain_ticks_ratio_autoscaled_over_static":
+                auto["ticks_to_drain"] / max(static["ticks_to_drain"], 1),
+            "peak_replicas_frac_of_max":
+                auto["peak_replicas"] / MAX_REPLICAS,
+        },
+    }
+    _CACHE["sweep"] = result
+    return result
+
+
+def run() -> List[tuple]:
+    sweep = run_sweep()
+    rows = []
+    for r in (sweep["autoscaled"], sweep["static"]):
+        tag = f"[{r['mode']},{r['tasks']}tasks]"
+        rows.append((f"ticks_to_drain{tag}", float(r["ticks_to_drain"])))
+        rows.append((f"peak_replicas{tag}", float(r["peak_replicas"])))
+        rows.append((f"wall_s{tag}", r["wall_s"]))
+    a = sweep["autoscaled"]
+    rows.append(("spilled_pods", float(a["spilled_pods"])))
+    rows.append(("lost_tasks", float(a["lost"])))
+    rows.append(("duplicate_executions", float(a["duplicate_executions"])))
+    for k, v in sweep["flatness"].items():
+        rows.append((k, v))
+    return rows
+
+
+def run_json() -> dict:
+    """Structured payload for ``benchmarks/run.py --json``."""
+    return run_sweep()

@@ -24,7 +24,7 @@ import sys
 import traceback
 from typing import Dict, List, Tuple
 
-GATED_SUITES = ("control_plane", "pipeline_plane")
+GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale")
 TOLERANCE = 1.2          # a gated number may move 20% the wrong way
 
 

@@ -21,8 +21,9 @@ import os
 import sys
 import traceback
 
-SUITES = ("control_plane", "pipeline_plane", "collective_locality",
-          "roofline_bench", "kernels_bench", "train_throughput")
+SUITES = ("control_plane", "pipeline_plane", "autoscale",
+          "collective_locality", "roofline_bench", "kernels_bench",
+          "train_throughput")
 
 
 def _rows_to_json(rows) -> dict:

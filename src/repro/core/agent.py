@@ -142,6 +142,8 @@ class ControlAgent:
             return self.accept_job(msg["job"])
         if kind == "cancel":
             return self.cancel_job(msg["job_id"])
+        if kind == "retire":
+            return self.retire_job(msg["job_id"])
         if kind == "drain":
             for jid in list(self.jobs):
                 self.cancel_job(jid)
@@ -170,6 +172,18 @@ class ControlAgent:
         if job_id in self.jobs:
             self.local_plane.cancel(job_id)
             self.jobs[job_id].status = "failed"
+        return {"ok": True}
+
+    def retire_job(self, job_id: str) -> dict:
+        """Graceful retirement (autoscaler scale-down): stop the job on the
+        local plane and FORGET it — no failure recorded, no more heartbeat
+        telemetry for it. The dispatcher tombstones the job's overwatch
+        records in the same breath, so nothing anywhere still believes the
+        pod exists."""
+        rec = self.jobs.pop(job_id, None)
+        if rec is not None:
+            self.local_plane.cancel(job_id)
+            rec.status = "done"
         return {"ok": True}
 
     # ------------------------------------------------------- heartbeat/telemetry

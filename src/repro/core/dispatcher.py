@@ -96,6 +96,7 @@ class Dispatcher:
         self._status: Dict[str, dict] = {}
         self._running: Set[str] = set()
         self._queue_depth: Dict[str, dict] = {}
+        self._retired: Set[str] = set()     # retired in absentia, unconfirmed
         self._straggler_rules: Dict[str, RoutingRule] = {}
         self._down_callbacks: List[Callable[[str], None]] = []
         # failure detector + view maintenance: subscribe (batch form) before
@@ -195,6 +196,21 @@ class Dispatcher:
         if len(parts) != 4:
             return
         _, _, jid, leaf = parts
+        if leaf == "status" and jid in self._retired:
+            # a retired-in-absentia pod's agent is talking again (partition
+            # healed before its lease expired): finish the retirement —
+            # re-send the retire and re-tombstone the key it just re-put —
+            # instead of letting the zombie repopulate the views forever
+            cluster = value.get("cluster")
+            if cluster is not None and cluster in self._clusters:
+                try:
+                    self._send_agent(cluster,
+                                     {"kind": "retire", "job_id": jid})
+                    self._retired.discard(jid)
+                except DeliveryError:
+                    pass
+            self.ow.handle({"op": "delete", "key": key})
+            return
         if leaf == "placement":
             old = self._placement.get(jid)
             if old is not None:
@@ -260,6 +276,16 @@ class Dispatcher:
         self.ow.flush_watches()
         return dict(self._queue_depth)
 
+    def job_status(self, job_id: str) -> Optional[dict]:
+        """The job's last reported status, straight from the watch view."""
+        self.ow.flush_watches()
+        return self._status.get(job_id)
+
+    def placement_of(self, job_id: str) -> Optional[dict]:
+        """The job's placement record, straight from the watch view."""
+        self.ow.flush_watches()
+        return self._placement.get(job_id)
+
     def _agent_addr(self, cluster: str):
         return tuple(self._clusters[cluster]["agent_addr"])
 
@@ -273,7 +299,14 @@ class Dispatcher:
         msg = Envelope({"kind": "configure", "spec": spec,
                         "master_state": master_state})
         for cluster in list(self._clusters):
-            self._send_agent(cluster, msg)
+            try:
+                self._send_agent(cluster, msg)
+            except DeliveryError:
+                # partitioned but not yet tombstoned: skip it — the lease
+                # sweep will deregister it, and a broadcast must never be
+                # hostage to one unreachable cluster (elastic fleets
+                # re-broadcast the spec on every pod change)
+                continue
 
     def _send_agent(self, cluster: str, msg: dict) -> dict:
         info = self._clusters[cluster]          # one lookup, zero round-trips
@@ -398,6 +431,12 @@ class Dispatcher:
         self._dispatch_to(cluster, job)
         return cluster
 
+    def dispatch_to(self, cluster: str, job: dict) -> None:
+        """Public placement-decided dispatch: the caller picked the cluster
+        (e.g. the autoscaler, which needs to know WHICH cluster an
+        unreachable dispatch was aimed at so it can exclude it and retry)."""
+        self._dispatch_to(cluster, job)
+
     def _dispatch_to(self, cluster: str, job: dict) -> None:
         """Placement already decided: ship the job and record the placement."""
         resp = self._send_agent(cluster, {"kind": "dispatch", "job": job})
@@ -468,6 +507,41 @@ class Dispatcher:
                 self._dispatch_to(cluster, job)
             placed.append(cluster)
         return placed
+
+    def retire(self, job_id: str) -> bool:
+        """Gracefully retire a placed job (the autoscaler's scale-down path):
+        the hosting agent stops it, then the job's ``/jobs/<id>`` placement
+        and status records are DELETED — unlike ``cancel``, retirement never
+        reads as a failure, and unlike completion it leaves no store records
+        behind, so recovery/stragglers can never resurrect a retired pod and
+        elastic churn (fleets scaling 0 -> N -> 0 forever) cannot leak keys
+        or view entries. If the hosting cluster is unreachable the records
+        are still tombstoned ("retired in absentia"): with no placement on
+        file, the eventual cluster-death recovery skips the job. Returns
+        False only when the job has no placement at all (already gone —
+        retirement is idempotent)."""
+        self.ow.flush_watches()
+        placement = self._placement.get(job_id)
+        if placement is None:
+            return False
+        cluster = placement["cluster"]
+        confirmed = False
+        if cluster in self._clusters:
+            try:
+                self._send_agent(cluster, {"kind": "retire",
+                                           "job_id": job_id})
+                confirmed = True
+            except DeliveryError:
+                pass                     # in absentia: tombstones still land
+        if not confirmed:
+            # the agent never heard the retire: if its partition heals before
+            # the lease sweep, its next heartbeat re-puts the status key —
+            # _job_put watches for that and finishes the retirement then
+            self._retired.add(job_id)
+        self.ow.handle({"op": "delete", "key": f"/jobs/{job_id}/placement"})
+        self.ow.handle({"op": "delete", "key": f"/jobs/{job_id}/status"})
+        self.ow.handle({"op": "delete", "key": f"/checkpoints/{job_id}"})
+        return True
 
     # ----------------------------------------------------------- failure handling
     def on_cluster_down(self, cb: Callable[[str], None]) -> None:

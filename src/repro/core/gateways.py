@@ -93,6 +93,12 @@ def set_access_control(state: GatewayState, spec: AppSpec, s: str) -> None:
     external = spec.host_cluster(s) != state.cluster
     dialed = state.dns[s]
     state.acl.block_all(dialed)
+    if external:
+        # the egress-gateway hop is an allowed address too: clear it as well,
+        # so a re-broadcast (elastic pod churn) is a true default-deny
+        # rebuild — a removed pod loses BOTH its dialed and egress entries,
+        # and the table never accretes stale tuples
+        state.acl.block_all((state.egw_ip, state.eport[s]))
     for pod in spec.pods_needing(s):
         if spec.partition[pod] != state.cluster:
             continue
@@ -118,18 +124,29 @@ def create_channels(fabric: Fabric, state: GatewayState, spec: AppSpec, s: str,
     h = spec.host_cluster(s)
     rank = service_rank(spec, s)
     i = state.cluster
+    # Idempotent under re-configuration: an AppSpec re-broadcast (elastic
+    # fleets add/remove pods at runtime) re-runs this algorithm on every
+    # agent; a tunnel that already terminates at the endpoint is kept —
+    # including a deliberately killed one, so fault injection survives
+    # reconfiguration — instead of stacking a duplicate channel.
     if h == master and s in state.eport:
-        fabric.create_channel(i, (state.egw_ip, state.eport[s]),
-                              master, (master_state.igw_ip, IPORT_BASE + rank))
+        if fabric.channel_at(i, (state.egw_ip, state.eport[s])) is None:
+            fabric.create_channel(
+                i, (state.egw_ip, state.eport[s]),
+                master, (master_state.igw_ip, IPORT_BASE + rank))
     elif h == i and spec.external_consumers(s):
-        fabric.create_channel(master, (master_state.egw_ip, EPORT_BASE + rank),
-                              i, (state.igw_ip, state.iport[s]))
+        if fabric.channel_at(master,
+                             (master_state.egw_ip, EPORT_BASE + rank)) is None:
+            fabric.create_channel(
+                master, (master_state.egw_ip, EPORT_BASE + rank),
+                i, (state.igw_ip, state.iport[s]))
     elif h not in (master, i) and s in state.eport:
         relay = RPORT_BASE + rank
         fabric.add_forward(master, (master_state.igw_ip, relay),
                            (master_state.egw_ip, EPORT_BASE + rank))
-        fabric.create_channel(i, (state.egw_ip, state.eport[s]),
-                              master, (master_state.igw_ip, relay))
+        if fabric.channel_at(i, (state.egw_ip, state.eport[s])) is None:
+            fabric.create_channel(i, (state.egw_ip, state.eport[s]),
+                                  master, (master_state.igw_ip, relay))
 
 
 def install_acl(fabric: Fabric, state: GatewayState) -> None:

@@ -133,6 +133,13 @@ class ManagementPlane:
         return self.overwatch.handle(
             {"op": "get", "key": f"/jobs/{job_id}/status"})["value"]
 
+    def retire_job(self, job_id: str) -> bool:
+        """Gracefully stop a placed job and tombstone its store records —
+        never recorded as a failure, never resurrected by recovery; the
+        management-plane surface the autoscaler uses to return worker pods
+        (see ``Dispatcher.retire``)."""
+        return self.dispatcher.retire(job_id)
+
     def add_routing_rule(self, rule: RoutingRule) -> None:
         self.dispatcher.add_rule(rule)
 

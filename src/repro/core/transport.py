@@ -200,6 +200,12 @@ class Fabric:
         self.channels[ch.channel_id] = ch
         return ch
 
+    def channel_at(self, cluster: str, addr: Address) -> Optional[Channel]:
+        """The channel terminating at (cluster, addr), if any — lets a
+        re-run of Algorithm 4 (AppSpec re-broadcast for an elastic fleet)
+        skip tunnels that already exist instead of stacking duplicates."""
+        return self._channels.get((cluster, addr))
+
     def set_acl(self, cluster: str, table: "AclTable") -> None:
         self._acl[cluster] = table
 

@@ -31,8 +31,22 @@ intact. By default an expired or nacked message re-enters its queue at the
 BACK (FIFO arrival order); the old always-``appendleft`` behavior starved the
 queue head under churn, because every redelivery jumped ahead of messages
 that had been waiting longer. ``requeue_front=True`` (per-broker, or per-op
-on ``nack``) restores jump-the-queue redelivery where lower redelivery
-latency matters more than fairness.
+on ``nack``/``nack_many``) restores jump-the-queue redelivery where lower
+redelivery latency matters more than fairness.
+
+Redelivery accounting distinguishes cause: ``stats["redelivered"]`` counts
+lease-EXPIRY redeliveries (a worker died holding the lease) while
+``stats["redelivered_nacked"]`` counts explicit returns (``nack`` /
+``nack_many`` — a worker handing work back on purpose). An autoscaler
+draining fleets cleanly should leave the expiry counter untouched; a rising
+expiry count is a fleet-health signal, a rising nack count is backpressure.
+
+Read ops are strictly read-only on queue state: ``pull``/``pull_many``/
+``depth``/``depth_many`` against an unknown queue return empty/zero and
+create NOTHING — probing a queue name must never materialize broker state.
+``depth_many`` without an explicit queue list reports only queues with a
+non-zero ready or inflight count, matching the tombstoned ``/queues/<name>``
+view (a fully drained queue disappears rather than lingering at 0/0).
 """
 from __future__ import annotations
 
@@ -78,7 +92,7 @@ class Broker:
                 continue                     # stale entry (acked) — lazy delete
             queue, msg, _ = rec
             self._requeue(queue, msg, self.requeue_front)
-            self.stats["redelivered"] += 1
+            self.stats["redelivered"] += 1          # lease-expiry redelivery
 
     def _requeue(self, queue: str, msg: dict, front: bool) -> None:
         q = self.queues.setdefault(queue, deque())
@@ -113,6 +127,16 @@ class Broker:
             return False                     # idempotent: unknown/double ack
         self._inflight_count[rec[0]] -= 1
         self._depth_dirty.add(rec[0])
+        return True
+
+    def _nack_one(self, tag, front) -> bool:
+        """Explicit return of a leased message (idempotent like ack)."""
+        rec = self.inflight.pop(tag, None)
+        if rec is None:
+            return False
+        self._requeue(rec[0], rec[1],
+                      self.requeue_front if front is None else front)
+        self.stats["redelivered_nacked"] += 1
         return True
 
     def _depth_of(self, queue: str) -> Tuple[int, int]:
@@ -154,23 +178,27 @@ class Broker:
             acked = sum(1 for t in msg.get("tags", ()) if self._ack_one(t))
             return {"ok": True, "acked": acked}
         if op == "nack":
-            rec = self.inflight.pop(msg.get("tag"), None)
-            if rec:
-                front = msg.get("requeue_front")
-                self._requeue(rec[0], rec[1],
-                              self.requeue_front if front is None else front)
+            self._nack_one(msg.get("tag"), msg.get("requeue_front"))
             return {"ok": True}
+        if op == "nack_many":
+            front = msg.get("requeue_front")
+            nacked = sum(1 for t in msg.get("tags", ())
+                         if self._nack_one(t, front))
+            return {"ok": True, "nacked": nacked}
         if op == "depth":
             ready, inflight = self._depth_of(msg["queue"])
             return {"ok": True, "depth": ready,
                     "ready": ready, "inflight": inflight}
         if op == "depth_many":
             queues = msg.get("queues")
-            if queues is None:
+            listing = queues is None
+            if listing:
                 queues = sorted(set(self.queues) | set(self._inflight_count))
             depths = {}
             for q in queues:
                 ready, inflight = self._depth_of(q)
+                if listing and not ready and not inflight:
+                    continue            # drained queues drop out of listings
                 depths[q] = {"ready": ready, "inflight": inflight}
             return {"ok": True, "depths": depths}
         return {"ok": False, "error": f"unknown op {op}"}

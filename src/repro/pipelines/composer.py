@@ -13,7 +13,17 @@ The composer also drives the broker's depth telemetry: on a sweep cadence
 (``depth_publish_every`` fabric-clock units, only queues whose counts moved)
 it publishes ``{"ready", "inflight"}`` under ``/queues/<name>`` in the
 overwatch via the master agent, which feeds the dispatcher's materialized
-queue-depth view — the "place workers near deep queues" loop.
+queue-depth view — the "place workers near deep queues" loop. A queue that
+drains to zero is TOMBSTONED (the key is deleted) rather than left at a
+stale 0/0, so the depth view only ever lists queues with live backlog.
+
+Worker fleets are elastic: ``add_worker``/``remove_worker`` grow and shrink
+the pod set at runtime — each change rebuilds the AppSpec and re-broadcasts
+it (Algorithm 5 re-runs on every agent: DNS/routes idempotently, ACLs from
+scratch), so a new worker pod gains broker/taskdb access the moment it lands
+and a removed pod loses it. ``attach_autoscaler`` wires the
+``repro.autoscale`` reconciler into the tick loop: the published queue
+depths drive worker-pod placement and retirement with no manual sizing.
 
 ``pipelined=True`` (default) runs the batched data plane end to end: the
 scheduler coalesces each tick's frontier into one ``upsert_many`` plus one
@@ -28,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.plane import ManagementPlane
 from repro.core.service_graph import AppSpec, Pod, Service
+from repro.core.transport import DeliveryError
 from repro.pipelines.broker import Broker
 from repro.pipelines.dag import DAG
 from repro.pipelines.scheduler import Scheduler
@@ -61,8 +72,14 @@ class HybridComposer:
                  workers: Dict[str, Sequence[str]],
                  worker_queues: Optional[Dict[str, Tuple[str, ...]]] = None,
                  worker_batch: int = 16, pipelined: bool = True,
-                 depth_publish_every: float = 1.0):
+                 depth_publish_every: float = 1.0,
+                 worker_setup=None):
         self.plane = plane
+        self.worker_batch = worker_batch
+        self.pipelined = pipelined
+        # applied to every worker, static AND dynamically spawned — the hook
+        # for registering custom task kinds on autoscaled pods
+        self.worker_setup = worker_setup
         self.spec = composer_appspec(plane.master, workers)
         plane.upload_spec(self.spec)
 
@@ -81,15 +98,27 @@ class HybridComposer:
 
         self.workers: List[PipelineWorker] = []
         for cluster, names in workers.items():
-            state = plane.agents[cluster].state
             for w in names:
-                client = ServiceClient(fabric, state, w)
                 queues = (worker_queues or {}).get(w, ("default",))
-                self.workers.append(PipelineWorker(
-                    client, w, queues=queues, clock_fn=lambda: fabric.clock,
-                    batch=worker_batch, pipelined=pipelined))
+                self._make_worker(w, cluster, queues)
         self.depth_publish_every = depth_publish_every
         self._depth_published_at: Optional[float] = None
+        self._published_queues: set = set()
+        self._spec_dirty = False
+        self.autoscaler = None
+
+    def _make_worker(self, name: str, cluster: str,
+                     queues: Tuple[str, ...]) -> PipelineWorker:
+        state = self.plane.agents[cluster].state
+        fabric = self.plane.fabric
+        client = ServiceClient(fabric, state, name)
+        worker = PipelineWorker(
+            client, name, queues=queues, clock_fn=lambda: fabric.clock,
+            batch=self.worker_batch, pipelined=self.pipelined)
+        if self.worker_setup is not None:
+            self.worker_setup(worker)
+        self.workers.append(worker)
+        return worker
 
     # ------------------------------------------------------------------- user API
     def add_dag(self, dag: DAG) -> None:
@@ -97,17 +126,85 @@ class HybridComposer:
 
     def tick(self) -> None:
         self.scheduler.tick()
-        for w in self.workers:
-            w.tick()
+        for w in list(self.workers):
+            try:
+                w.tick()
+            except DeliveryError:
+                # the worker's cluster is partitioned/dead: its leased tasks
+                # redeliver on lease expiry, and the autoscaler (if attached)
+                # prunes and replaces the pod on its next pass
+                continue
         self.publish_queue_depths()
+        if self.autoscaler is not None:
+            self.autoscaler.reconcile()
         self.plane.tick()
+
+    # ------------------------------------------------------------- elastic fleet
+    def add_worker(self, name: str, cluster: str,
+                   queues: Tuple[str, ...] = ("default",),
+                   broadcast: bool = True) -> PipelineWorker:
+        """Materialize a new worker pod at runtime: extend the AppSpec with
+        the pod, re-broadcast the CRD (every agent re-runs Algorithm 5 — the
+        new pod gets DNS + ACL access to broker/taskdb), then start the
+        local ``PipelineWorker``. ``broadcast=False`` defers the re-broadcast
+        (mark dirty, ``flush_spec`` later) so a burst of pod changes costs
+        ONE broadcast — safe as long as the flush lands before the new
+        worker's first tick, which the autoscaler guarantees by flushing at
+        the end of every reconcile pass."""
+        pods = tuple(self.spec.pods) + (Pod(name, needs=("broker", "taskdb")),)
+        partition = {**self.spec.partition, name: cluster}
+        self.spec = AppSpec(services=self.spec.services, pods=pods,
+                            partition=partition)
+        self._spec_dirty = True
+        if broadcast:
+            self.flush_spec()
+        return self._make_worker(name, cluster, queues)
+
+    def remove_worker(self, worker: PipelineWorker,
+                      broadcast: bool = True) -> None:
+        """Tear a worker pod out of the app: drop it from the local fleet and
+        re-broadcast the shrunk AppSpec so its ACL entries are revoked (a
+        removed pod can no longer reach the broker — Algorithm 3 is rebuilt
+        default-deny on every re-broadcast). ``broadcast=False`` defers like
+        ``add_worker``."""
+        if worker in self.workers:
+            self.workers.remove(worker)
+        if worker.pod not in self.spec.partition:
+            return
+        pods = tuple(p for p in self.spec.pods if p.name != worker.pod)
+        partition = {k: v for k, v in self.spec.partition.items()
+                     if k != worker.pod}
+        self.spec = AppSpec(services=self.spec.services, pods=pods,
+                            partition=partition)
+        self._spec_dirty = True
+        if broadcast:
+            self.flush_spec()
+
+    def flush_spec(self) -> None:
+        """Re-broadcast the AppSpec if any deferred pod change is pending."""
+        if self._spec_dirty:
+            self._spec_dirty = False
+            self.plane.upload_spec(self.spec)
+
+    def attach_autoscaler(self, policies, **kwargs):
+        """Create and wire a ``repro.autoscale.Reconciler`` into the tick
+        loop (see that module for the policy/quota/spillover model)."""
+        from repro.autoscale.reconciler import Reconciler
+        self.autoscaler = Reconciler(self, policies, **kwargs)
+        return self.autoscaler
 
     # ------------------------------------------------------------ depth telemetry
     def publish_queue_depths(self) -> None:
         """Sweep-cadence depth publication: at most once per
         ``depth_publish_every`` fabric-clock units, put the (ready, inflight)
         counts of every queue whose depth changed under ``/queues/<name>`` —
-        a handful of coalesce-friendly puts, not one per queue per tick."""
+        a handful of coalesce-friendly puts, not one per queue per tick.
+
+        A queue that drained to zero (no ready, no inflight) is tombstoned:
+        its key is DELETED so the dispatcher's ``_queue_depth`` view drops
+        the entry instead of carrying a stale last-depth forever. A queue
+        that appears and fully drains within one cadence window is never
+        published at all."""
         now = self.plane.fabric.clock
         if (self._depth_published_at is not None
                 and now - self._depth_published_at < self.depth_publish_every):
@@ -115,7 +212,13 @@ class HybridComposer:
         self._depth_published_at = now
         ow = self.plane.master_agent.ow
         for queue, depth in self.broker.changed_depths().items():
+            if not depth["ready"] and not depth["inflight"]:
+                if queue in self._published_queues:
+                    ow.delete(f"/queues/{queue}")
+                    self._published_queues.discard(queue)
+                continue
             ow.put(f"/queues/{queue}", {**depth, "clock": now})
+            self._published_queues.add(queue)
 
     def run_dag(self, dag_id: str, max_ticks: int = 500) -> bool:
         for _ in range(max_ticks):

@@ -12,6 +12,13 @@ Requests ride ``Envelope`` payloads: a batched request (``push_many`` /
 fabric hops between a private worker and the master-hosted services, and the
 envelope caches its byte size so the ledger walks the batch once, not once
 per hop.
+
+Clients work for ELASTIC pods too: a worker pod added at runtime (composer
+``add_worker`` / autoscaler spawn) dials services the moment the AppSpec
+re-broadcast lands — DNS and ACLs are per-spec state rebuilt by Algorithm 5,
+not per-process state — and a pod removed from the spec is denied again at
+the next call (default-deny ACL rebuild), which is what the drained-worker
+tests assert.
 """
 from __future__ import annotations
 

@@ -22,11 +22,27 @@ that is pulled but never committed (worker death) is simply redelivered when
 its broker lease expires, exactly as in the per-task protocol; the terminal
 taskdb states of both protocols are identical (``pipelined=False`` keeps the
 seed's per-task path for equivalence tests and the benchmark baseline).
+
+Drain protocol (the autoscaling plane): a worker being retired must hand its
+slot back WITHOUT losing or re-running any leased task. The tick is split
+into two explicit phases around an in-flight buffer —
+
+  ``pull_phase``   lease up to ``batch`` messages per queue into the buffer;
+  ``commit_phase`` execute the buffer, ONE ``upsert_many`` with every
+                   (running, terminal) row pair, then ONE final ``ack_many``;
+
+and ``drain()`` runs the graceful exit: stop pulling (state -> ``draining``),
+execute + commit whatever is in flight, final-ack it, then flip to
+``drained`` and fire ``on_drained`` (the autoscaler's hook that retires the
+pod's job and publishes the drained state). Because every leased tag is
+acked exactly after its terminal row is durable, the broker is left with no
+lease to expire — nothing is redelivered, nothing runs twice. A drained
+worker's ``tick()`` is a no-op forever after.
 """
 from __future__ import annotations
 
 import traceback
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.pipelines.services import ServiceClient
 
@@ -91,7 +107,9 @@ DEFAULT_HANDLERS: Dict[str, Callable[[dict], dict]] = {
 class PipelineWorker:
     def __init__(self, client: ServiceClient, pod: str,
                  queues: Tuple[str, ...] = ("default",), clock_fn=None,
-                 batch: int = 16, pipelined: bool = True):
+                 batch: int = 16, pipelined: bool = True,
+                 on_drained: Optional[Callable[["PipelineWorker"], None]]
+                 = None):
         self.client = client
         self.pod = pod
         self.queues = tuple(queues)
@@ -100,6 +118,9 @@ class PipelineWorker:
         self.batch = max(int(batch), 1)
         self.pipelined = pipelined
         self.executed = 0
+        self.state = "running"          # running | draining | drained
+        self.on_drained = on_drained
+        self._inflight: List[Tuple[dict, int]] = []   # leased, uncommitted
 
     def register(self, kind: str, fn: Callable[[dict], dict]) -> None:
         self.handlers[kind] = fn
@@ -107,29 +128,78 @@ class PipelineWorker:
     # --------------------------------------------------------------------- one tick
     def tick(self) -> List[str]:
         """Drain up to ``batch`` tasks per queue; returns the executed ids."""
+        if self.state == "drained":
+            return []
         if not self.pipelined:
+            if self.state == "draining":
+                self._finish_drain()
+                return []
             one = self._tick_sync()
             return [one] if one else []
-        executed: List[str] = []
+        if self.state == "running":
+            self.pull_phase()
+        executed = self.commit_phase()
+        if self.state == "draining":
+            self._finish_drain()
+        return executed
+
+    # ------------------------------------------------------------ batch phases
+    def pull_phase(self) -> int:
+        """Phase 1: lease up to ``batch`` task instances per queue into the
+        in-flight buffer (one ``pull_many`` per queue). A draining worker
+        never pulls — the first step of the drain protocol."""
+        if self.state != "running":
+            return 0
+        pulled = 0
         for queue in self.queues:
             resp = self.client.call("broker", {"op": "pull_many",
                                                "queue": queue,
                                                "max_n": self.batch})
             msgs = resp.get("msgs") or []
-            if not msgs:
-                continue
-            rows: List[dict] = []
-            for msg in msgs:
-                rows.extend(self._run(msg))
-                executed.append(f"{msg['dag']}.{msg['task']}")
-            # one batched commit, then one batched ack: the taskdb rows are
-            # durable before the broker forgets the leases, so a crash between
-            # the two at worst re-runs already-committed tasks (same-try
-            # upserts are idempotent), never loses one
-            self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
-            self.client.call("broker", {"op": "ack_many",
-                                        "tags": resp.get("tags") or []})
+            tags = resp.get("tags") or []
+            self._inflight.extend(zip(msgs, tags))
+            pulled += len(msgs)
+        return pulled
+
+    def commit_phase(self) -> List[str]:
+        """Phase 2: execute the in-flight buffer, then commit it with ONE
+        taskdb ``upsert_many`` and ONE broker ``ack_many``. Rows are durable
+        before the broker forgets the leases, so a crash between the two at
+        worst re-runs already-committed tasks (same-try upserts are
+        idempotent), never loses one."""
+        if not self._inflight:
+            return []
+        batch, self._inflight = self._inflight, []
+        rows: List[dict] = []
+        tags: List[int] = []
+        executed: List[str] = []
+        for msg, tag in batch:
+            rows.extend(self._run(msg))
+            executed.append(f"{msg['dag']}.{msg['task']}")
+            tags.append(tag)
+        self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
+        self.client.call("broker", {"op": "ack_many", "tags": tags})
         return executed
+
+    # ------------------------------------------------------------------- drain
+    def drain(self) -> List[str]:
+        """Graceful exit: stop pulling, execute + commit the in-flight batch,
+        final ack, then publish the drained state through ``on_drained``.
+        Loss-free by construction — every lease this worker holds is acked
+        after its terminal row commits, so the broker redelivers nothing."""
+        if self.state == "drained":
+            return []
+        self.state = "draining"
+        executed = self.commit_phase() if self.pipelined else []
+        self._finish_drain()
+        return executed
+
+    def _finish_drain(self) -> None:
+        if self.state == "drained" or self._inflight:
+            return
+        self.state = "drained"
+        if self.on_drained is not None:
+            self.on_drained(self)
 
     def _run(self, msg: dict) -> List[dict]:
         """Execute one task; return its (running, terminal) row pair."""

@@ -1,0 +1,582 @@
+"""Elastic autoscaling plane: policy hysteresis, queue-depth-driven
+reconciliation, quota/spillover placement, and the loss-free worker drain
+protocol (plus the broker/composer satellites that ride along)."""
+from collections import Counter
+
+import pytest
+
+from repro.autoscale import ScalingPolicy
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.core.transport import DeliveryError
+from repro.pipelines import DAG, Task, HybridComposer
+from repro.pipelines.broker import Broker
+from repro.pipelines.taskdb import TaskDB
+from repro.pipelines.worker import PipelineWorker
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class LocalClient:
+    """In-process broker+taskdb behind the ServiceClient interface."""
+
+    def __init__(self, broker: Broker, db: TaskDB):
+        self.broker = broker
+        self.db = db
+        self.calls = Counter()
+
+    def call(self, service, msg):
+        self.calls[(service, msg["op"])] += 1
+        return (self.broker.handle if service == "broker"
+                else self.db.handle)(msg)
+
+
+# ------------------------------------------------------------------- policy
+def test_policy_cold_start_and_step_limit():
+    p = ScalingPolicy(family="f", target_depth_per_worker=10,
+                      max_replicas=16, scale_up_step=4)
+    assert p.desired_replicas(0, 0) == 0
+    assert p.desired_replicas(15, 0) == 2          # cold start: ceil(15/10)
+    assert p.desired_replicas(1000, 0) == 4        # step-limited
+    assert p.desired_replicas(1000, 4) == 8        # keeps stepping
+    assert p.desired_replicas(1000, 14) == 16      # clamped at max
+
+
+def test_policy_hysteresis_band_is_sticky():
+    p = ScalingPolicy(family="f", target_depth_per_worker=8,
+                      up_threshold=1.25, down_threshold=0.5, max_replicas=8)
+    # 2 workers, target band is (2*8*0.5, 2*8*1.25] = (8, 20]
+    assert p.desired_replicas(18, 2) == 2          # inside band: no change
+    assert p.desired_replicas(9, 2) == 2
+    assert p.desired_replicas(21, 2) == 3          # above band: grow
+    assert p.desired_replicas(7, 2) == 1           # below band: shrink
+
+
+def test_policy_scale_to_zero_and_min_floor():
+    p = ScalingPolicy(family="f", target_depth_per_worker=8, min_replicas=0,
+                      scale_down_step=2, max_replicas=8)
+    assert p.desired_replicas(0, 3) == 1
+    assert p.desired_replicas(0, 1) == 0           # scale-to-zero allowed
+    floor = ScalingPolicy(family="g", min_replicas=2, max_replicas=8,
+                          scale_down_step=4)
+    assert floor.desired_replicas(0, 4) == 2       # never below the floor
+    assert floor.desired_replicas(0, 0) == 2       # cold start to the floor
+    # a fleet knocked below the floor (lost pod) recovers even when the
+    # backlog is too quiet to clear the up-hysteresis band
+    assert floor.desired_replicas(0, 1) == 2
+
+
+def test_policy_down_threshold_zero_still_scales_to_zero():
+    p = ScalingPolicy(family="f", target_depth_per_worker=8,
+                      down_threshold=0.0, scale_down_step=8, max_replicas=8)
+    assert p.desired_replicas(1, 8) == 8     # any backlog holds the fleet
+    assert p.desired_replicas(0, 8) == 0     # an empty one drains it
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ScalingPolicy(family="f", up_threshold=0.9)
+    with pytest.raises(ValueError):
+        ScalingPolicy(family="f", down_threshold=1.5)
+    with pytest.raises(ValueError):
+        ScalingPolicy(family="f", min_replicas=5, max_replicas=2)
+    with pytest.raises(ValueError):
+        ScalingPolicy(family="f", target_depth_per_worker=0)
+
+
+# ---------------------------------------------------------- broker satellites
+def test_probing_unknown_queue_creates_no_state():
+    b = Broker()
+    b.handle({"op": "pull", "queue": "ghost"})
+    b.handle({"op": "pull_many", "queue": "ghost", "max_n": 8})
+    d = b.handle({"op": "depth", "queue": "ghost"})
+    assert (d["ready"], d["inflight"]) == (0, 0)
+    many = b.handle({"op": "depth_many", "queues": ["ghost"]})["depths"]
+    assert many["ghost"] == {"ready": 0, "inflight": 0}
+    assert "ghost" not in b.queues
+    assert "ghost" not in b._inflight_count
+    assert b.handle({"op": "depth_many"})["depths"] == {}
+
+
+def test_depth_many_listing_drops_drained_queues():
+    b = Broker()
+    b.handle({"op": "push", "queue": "q", "msg": {"i": 1}})
+    assert "q" in b.handle({"op": "depth_many"})["depths"]
+    tag = b.handle({"op": "pull", "queue": "q"})["tag"]
+    b.handle({"op": "ack", "tag": tag})
+    # fully drained: gone from the listing, still zero when asked explicitly
+    assert b.handle({"op": "depth_many"})["depths"] == {}
+    assert b.handle({"op": "depth_many", "queues": ["q"]})["depths"]["q"] == \
+        {"ready": 0, "inflight": 0}
+
+
+def test_redelivery_stats_distinguish_expiry_from_nack():
+    clock = FakeClock()
+    b = Broker(clock_fn=clock, lease=5.0)
+    b.handle({"op": "push_many", "queue": "q",
+              "msgs": [{"i": i} for i in range(4)]})
+    tags = b.handle({"op": "pull_many", "queue": "q", "max_n": 4})["tags"]
+    b.handle({"op": "nack", "tag": tags[0]})
+    b.handle({"op": "nack_many", "tags": tags[1:3]})
+    assert b.stats["redelivered_nacked"] == 3
+    assert b.stats.get("redelivered", 0) == 0       # no lease has expired
+    clock.t = 6.0
+    b.handle({"op": "depth", "queue": "q"})          # expiry sweep
+    assert b.stats["redelivered"] == 1               # the un-nacked lease
+    assert b.stats["redelivered_nacked"] == 3        # unchanged
+    d = b.handle({"op": "depth", "queue": "q"})
+    assert (d["ready"], d["inflight"]) == (4, 0)
+
+
+def test_nack_many_is_idempotent_and_honors_front():
+    b = Broker()
+    b.handle({"op": "push_many", "queue": "q", "msgs": [{"m": 1}, {"m": 2}]})
+    tags = b.handle({"op": "pull_many", "queue": "q", "max_n": 2})["tags"]
+    resp = b.handle({"op": "nack_many", "tags": tags + [999],
+                     "requeue_front": True})
+    assert resp["nacked"] == 2
+    assert [m["m"] for m in b.queues["q"]] == [2, 1]  # front, in tag order
+    assert b.handle({"op": "nack_many", "tags": tags})["nacked"] == 0
+
+
+# ------------------------------------------------------- worker drain protocol
+def test_drain_commits_inflight_batch_exactly_once():
+    """The mid-commit edge: a worker holding a pulled-but-uncommitted batch
+    drains — the batch is executed, committed with one upsert_many, final
+    acked, and NEVER redelivered."""
+    clock = FakeClock()
+    broker, db = Broker(clock_fn=clock, lease=10.0), TaskDB()
+    client = LocalClient(broker, db)
+    broker.handle({"op": "push_many", "queue": "default", "msgs": [
+        {"dag": "d", "task": f"t{i}", "kind": "python", "payload": {},
+         "try": 1} for i in range(5)]})
+    w = PipelineWorker(client, "w0", batch=8, clock_fn=clock)
+    assert w.pull_phase() == 5
+    assert len(broker.inflight) == 5
+    drained = []
+    w.on_drained = lambda wk: drained.append(wk.pod)
+    client.calls.clear()
+    executed = w.drain()
+    assert executed == [f"d.t{i}" for i in range(5)]
+    assert w.state == "drained" and drained == ["w0"]
+    assert client.calls == Counter({("taskdb", "upsert_many"): 1,
+                                    ("broker", "ack_many"): 1})
+    state = db.handle({"op": "dag_state", "dag": "d"})["tasks"]
+    assert all(state[f"t{i}"]["status"] == "success" for i in range(5))
+    # far past the lease: nothing redelivers — the final ack beat expiry
+    clock.t = 1000.0
+    broker.handle({"op": "depth", "queue": "default"})
+    assert broker.stats.get("redelivered", 0) == 0
+    assert not broker.inflight
+    # a drained worker never works again
+    broker.handle({"op": "push", "queue": "default",
+                   "msg": {"dag": "d", "task": "late", "kind": "python",
+                           "payload": {}, "try": 1}})
+    assert w.tick() == [] and w.pull_phase() == 0
+
+
+def test_drain_with_empty_buffer_is_immediate():
+    w = PipelineWorker(LocalClient(Broker(), TaskDB()), "w0")
+    fired = []
+    w.on_drained = lambda wk: fired.append(wk.state)
+    assert w.drain() == []
+    assert w.state == "drained" and fired == ["drained"]
+    # idempotent
+    assert w.drain() == [] and len(fired) == 1
+
+
+def test_draining_worker_stops_pulling_but_tick_finishes():
+    broker, db = Broker(), TaskDB()
+    client = LocalClient(broker, db)
+    broker.handle({"op": "push_many", "queue": "default", "msgs": [
+        {"dag": "d", "task": "a", "kind": "python", "payload": {}, "try": 1}]})
+    w = PipelineWorker(client, "w0", batch=4)
+    w.state = "draining"
+    assert w.tick() == []                      # no pull while draining
+    assert w.state == "drained"
+    d = broker.handle({"op": "depth", "queue": "default"})
+    assert d["ready"] == 1                     # the message was never leased
+
+
+# ------------------------------------------------------- composer tombstones
+def test_drained_queue_is_tombstoned_from_depth_view():
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    comp = HybridComposer(plane, workers={"master": ["w0"]}, worker_batch=4)
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python") for i in range(12)]))
+    comp.tick()
+    assert plane.dispatcher.queue_depths()["default"]["ready"] > 0
+    for _ in range(8):
+        comp.tick()
+    assert comp.scheduler.dag_success("d")
+    # drained to zero -> key deleted, view entry dropped (not a stale 0/0)
+    assert "default" not in plane.dispatcher.queue_depths()
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/queues/default"})["value"] is None
+
+
+def test_queue_drained_within_one_sweep_is_never_published():
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    comp = HybridComposer(plane, workers={"master": ["w0"]})
+    # push + drain between sweeps: no put, no delete for this queue
+    comp.broker.handle({"op": "push", "queue": "flash", "msg": {
+        "dag": "x", "task": "t", "kind": "python", "payload": {}, "try": 1}})
+    tag = comp.broker.handle({"op": "pull", "queue": "flash"})["tag"]
+    comp.broker.handle({"op": "ack", "tag": tag})
+    comp.publish_queue_depths()
+    ops = [(op, key) for _, op, key, _v in plane.overwatch.op_log
+           if key.startswith("/queues/")]
+    assert ops == []
+
+
+# ------------------------------------------------------------- the reconciler
+def _hybrid_plane():
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a",
+                      local_plane=SimLocalPlane(caps=("cpu", "onprem")))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    return plane
+
+
+def _policy(**kw):
+    base = dict(family="default", queues=("default",), requires=("cpu",),
+                target_depth_per_worker=8, min_replicas=0, max_replicas=4,
+                scale_up_step=4, scale_down_step=2,
+                up_cooldown=0.0, down_cooldown=0.0)
+    base.update(kw)
+    return ScalingPolicy(**base)
+
+
+def _put_depth(plane, queue, ready, inflight=0):
+    plane.overwatch.handle({"op": "put", "key": f"/queues/{queue}",
+                            "value": {"ready": ready, "inflight": inflight}})
+
+
+def test_scale_up_fills_preferred_then_spills_over():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler([_policy()],
+                                 quotas={"onprem-a": 2, "master": 0},
+                                 preferred=("onprem-a",))
+    _put_depth(plane, "default", 100)
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 4
+    placed = Counter(r.cluster for r in asc.pods["default"].values())
+    # preferred tier filled to quota, burst spilled into the public cloud
+    assert placed == Counter({"onprem-a": 2, "cloud-a": 2})
+    state = plane.overwatch.handle(
+        {"op": "get", "key": "/autoscale/default"})["value"]
+    assert state["replicas"] == 4 and state["at_quota"] is False
+    assert set(state["pods"]) == set(asc.pods["default"])
+
+
+def test_all_clusters_at_quota_blocks_without_crashing():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=6, scale_up_step=6)],
+        quotas={"onprem-a": 1, "cloud-a": 1, "master": 0},
+        preferred=("onprem-a",))
+    _put_depth(plane, "default", 500)
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 2            # capacity, not desire
+    state = plane.overwatch.handle(
+        {"op": "get", "key": "/autoscale/default"})["value"]
+    assert state["at_quota"] is True and state["desired"] == 6
+    # freeing quota lets the next pass resume the burst
+    asc.quotas["cloud-a"] = 5
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 6
+    assert plane.overwatch.handle(
+        {"op": "get", "key": "/autoscale/default"})["value"]["at_quota"] is False
+
+
+def test_scale_down_retreats_from_spillover_first_and_revokes_acl():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler([_policy()],
+                                 quotas={"onprem-a": 2, "master": 0},
+                                 preferred=("onprem-a",))
+    _put_depth(plane, "default", 100)
+    asc.reconcile(force=True)
+    cloud_workers = [r.worker for r in asc.pods["default"].values()
+                     if r.cluster == "cloud-a"]
+    assert asc.replicas("default") == 4 and len(cloud_workers) == 2
+    _put_depth(plane, "default", 9)                # below the down band
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 2
+    remaining = {r.cluster for r in asc.pods["default"].values()}
+    assert remaining == {"onprem-a"}               # cloud pods went first
+    # the drained pods' jobs are tombstoned from the store (no leaked
+    # placement/status keys for elastic churn) and their ACL access is gone
+    for w in cloud_workers:
+        assert w.state == "drained"
+        assert plane.job_status(w.pod) is None
+        assert plane.overwatch.handle(
+            {"op": "get", "key": f"/jobs/{w.pod}/placement"})["value"] is None
+        with pytest.raises(DeliveryError):
+            w.client.call("broker", {"op": "depth", "queue": "default"})
+
+
+def test_blocked_reason_distinguishes_eligibility_from_quota():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler([_policy(requires=("gpu",))])
+    _put_depth(plane, "default", 100)
+    asc.reconcile(force=True)                      # nothing carries "gpu"
+    state = plane.overwatch.handle(
+        {"op": "get", "key": "/autoscale/default"})["value"]
+    assert state["blocked"] == "no_eligible_cluster"
+    assert state["at_quota"] is False              # NOT a capacity problem
+
+
+def test_drain_of_unreachable_pod_is_demoted_to_lost_not_a_crash():
+    """A scale-down victim whose cluster partitioned mid-commit: the graceful
+    drain fails, the pod is retired in absentia and forgotten, its leases
+    are left to redeliver — and the tick loop never sees the exception."""
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={}, worker_batch=8)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=2, scale_up_step=2, scale_down_step=2)],
+        quotas={"onprem-a": 1, "cloud-a": 1, "master": 0},
+        preferred=("onprem-a",))
+    _put_depth(plane, "default", 100)
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 2
+    cloud = [r for r in asc.pods["default"].values()
+             if r.cluster == "cloud-a"][0]
+    comp.broker.handle({"op": "push_many", "queue": "default", "msgs": [
+        {"dag": "d", "task": f"t{i}", "kind": "python", "payload": {},
+         "try": 1} for i in range(3)]})
+    assert cloud.worker.pull_phase() == 3          # leased, uncommitted
+    plane.fabric.partition_cluster("cloud-a")
+    _put_depth(plane, "default", 0)
+    asc.reconcile(force=True)                      # must not raise
+    assert asc.replicas("default") == 0
+    assert any(e[2] == "lost" and e[3] == cloud.name for e in asc.events)
+    # the failed drain left its leases to the broker's expiry machinery
+    assert len(comp.broker.inflight) == 3
+
+
+def test_cooldowns_rate_limit_scaling():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler(
+        [_policy(scale_up_step=1, up_cooldown=5.0)], quotas={"master": 0})
+    _put_depth(plane, "default", 100)
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 1
+    plane.tick()                                    # clock 1 < cooldown 5
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 1             # still cooling down
+    plane.tick(n=5)
+    asc.reconcile(force=True)
+    assert asc.replicas("default") == 2
+    # cold start bypasses the up-cooldown: a fresh family reacts immediately
+    state = asc.pods["default"]
+    assert all(r.state == "running" for r in state.values())
+
+
+def test_scale_to_zero_then_cold_start():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={}, worker_batch=8)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=3, scale_up_step=3, scale_down_step=3)],
+        quotas={"master": 0})
+    comp.add_dag(DAG("one", [Task(f"a{i}", kind="python") for i in range(30)]))
+    for _ in range(40):
+        comp.tick()
+        if (comp.scheduler.dag_done("one", probe=False)
+                and asc.replicas("default") == 0):
+            break
+    assert comp.scheduler.dag_success("one")
+    assert asc.replicas("default") == 0            # fleet fully retired
+    assert plane.dispatcher.queue_depths() == {}   # queue tombstoned
+    # cold start: a new backlog resurrects the fleet with fresh pods
+    comp.add_dag(DAG("two", [Task(f"b{i}", kind="python") for i in range(30)]))
+    for _ in range(40):
+        comp.tick()
+        if comp.scheduler.dag_done("two", probe=False):
+            break
+    assert comp.scheduler.dag_success("two")
+    ups = [e for e in asc.events if e[2] == "scale_up"]
+    downs = [e for e in asc.events if e[2] == "scale_down"]
+    assert len(ups) >= 4 and len(downs) >= 3       # two generations of pods
+
+
+def test_no_task_lost_or_double_executed_across_scale_down():
+    """The acceptance property: an elastic run with mid-backlog scale-down
+    events executes every task EXACTLY once — drains commit in-flight work
+    and final-ack it, so no lease ever expires into a redelivery."""
+    plane = _hybrid_plane()
+    counts = Counter()
+
+    def setup(worker):
+        worker.register("count",
+                        lambda p, _c=counts: {"n": _c.update([p["i"]]) or 1})
+
+    comp = HybridComposer(plane, workers={}, worker_batch=8,
+                          worker_setup=setup)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=8, scale_up_step=8, scale_down_step=1)],
+        quotas={"onprem-a": 4, "master": 0}, preferred=("onprem-a",))
+    n = 400
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="count", payload={"i": i})
+                           for i in range(n)]))
+    done_at = None
+    for tick in range(1, 80):
+        comp.tick()
+        if done_at is None and comp.scheduler.dag_done("d", probe=False):
+            done_at = tick
+        if done_at is not None and asc.replicas("default") == 0:
+            break
+    assert comp.scheduler.dag_success("d")
+    assert len(counts) == n                        # zero lost
+    assert all(c == 1 for c in counts.values())    # zero double-executed
+    assert comp.broker.stats.get("redelivered", 0) == 0
+    assert comp.broker.stats.get("redelivered_nacked", 0) == 0
+    assert sum(1 for e in asc.events if e[2] == "scale_down") >= 1
+    assert asc.replicas("default") == 0
+
+
+def test_autoscaled_fleet_drains_within_bound_of_static():
+    """Small-scale version of the benchmark gate: the elastic fleet's time to
+    drain stays within 1.5x an optimally-sized static fleet."""
+    def drain_ticks(autoscaled: bool) -> int:
+        plane = _hybrid_plane()
+        if autoscaled:
+            comp = HybridComposer(plane, workers={}, worker_batch=16)
+            comp.attach_autoscaler(
+                [_policy(max_replicas=4, scale_up_step=2,
+                         target_depth_per_worker=64)],
+                quotas={"onprem-a": 2, "master": 0}, preferred=("onprem-a",))
+        else:
+            comp = HybridComposer(
+                plane, workers={"onprem-a": ["s0", "s1"],
+                                "cloud-a": ["s2", "s3"]}, worker_batch=16)
+        comp.add_dag(DAG("d", [Task(f"t{i}", kind="python")
+                               for i in range(800)]))
+        for tick in range(1, 200):
+            comp.tick()
+            if comp.scheduler.dag_done("d", probe=False):
+                assert comp.scheduler.dag_success("d", probe=False)
+                return tick
+        raise AssertionError("backlog never drained")
+
+    static = drain_ticks(False)
+    auto = drain_ticks(True)
+    assert auto <= 1.5 * static, (auto, static)
+
+
+def test_reconciler_prunes_pods_lost_to_cluster_death():
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={}, worker_batch=8)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=2, scale_up_step=2)],
+        quotas={"onprem-a": 1, "cloud-a": 1, "master": 0},
+        preferred=("onprem-a",))
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python") for i in range(200)]))
+    comp.tick()
+    assert asc.replicas("default") == 2
+    plane.fabric.partition_cluster("cloud-a")
+    for _ in range(30):
+        comp.tick()
+        if comp.scheduler.dag_done("d", probe=False):
+            break
+    assert comp.scheduler.dag_success("d")
+    assert any(e[2] == "lost" and e[4] == "cloud-a" for e in asc.events)
+    # the surviving fleet never exceeds what live clusters can host
+    assert all(r.cluster != "cloud-a" for r in asc.pods["default"].values())
+
+
+# ------------------------------------------------------------ retire surface
+def test_retire_tombstones_job_records():
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("c1")
+    jid = plane.submit_job("sim", steps=10 ** 9)
+    plane.tick(n=2)
+    assert plane.job_status(jid)["status"] == "running"
+    assert plane.retire_job(jid) is True
+    # not failed, not done — GONE: no /jobs keys, no view entries, nothing
+    # for recovery or stragglers to resurrect, no leak under elastic churn
+    assert plane.job_status(jid) is None
+    assert plane.overwatch.handle(
+        {"op": "range", "prefix": f"/jobs/{jid}/"})["items"] == {}
+    assert plane.dispatcher.placement_of(jid) is None
+    assert plane.dispatcher.job_status(jid) is None
+    # the agent forgot it too: no more heartbeat telemetry rows for the pod
+    plane.tick(n=2)
+    assert plane.job_status(jid) is None
+    assert plane.agents["c1"].jobs.get(jid) is None
+    # idempotent surface: retiring an unknown job is a no-op
+    assert plane.retire_job("nope") is False
+
+
+def test_retire_in_absentia_survives_healed_partition():
+    """Retire while the hosting cluster is partitioned (but still leased),
+    then heal the partition BEFORE the lease expires: the agent's next
+    heartbeat must not resurrect the job — the dispatcher finishes the
+    retirement instead of letting a 10^9-step zombie live forever."""
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("c1")
+    jid = plane.submit_job("sim", steps=10 ** 9)
+    plane.tick()
+    plane.fabric.partition_cluster("c1")
+    assert plane.retire_job(jid) is True           # in absentia
+    assert plane.job_status(jid) is None
+    plane.fabric.heal_cluster("c1")                # before lease expiry
+    plane.tick(n=3)
+    # the heartbeat's status re-put was intercepted: retire re-sent, key
+    # re-tombstoned, agent forgot the job, views stay clean
+    assert plane.job_status(jid) is None
+    assert plane.agents["c1"].jobs.get(jid) is None
+    assert plane.dispatcher.job_status(jid) is None
+
+
+def test_broadcast_tolerates_partitioned_cluster():
+    """An AppSpec re-broadcast (elastic pod churn) must not be hostage to one
+    partitioned-but-not-yet-tombstoned cluster."""
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={}, worker_batch=8)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=2, scale_up_step=2)],
+        quotas={"onprem-a": 2, "master": 0}, preferred=("onprem-a",))
+    plane.fabric.partition_cluster("cloud-a")      # leased, unreachable
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python") for i in range(60)]))
+    for _ in range(30):
+        comp.tick()                                # spawns re-broadcast here
+        if comp.scheduler.dag_done("d", probe=False):
+            break
+    assert comp.scheduler.dag_success("d")
+    ups = [e for e in asc.events if e[2] == "scale_up"]
+    assert ups and all(e[4] == "onprem-a" for e in ups)
+
+
+def test_spawn_survives_partitioned_spillover_cluster():
+    """Preferred tier at quota, spillover target partitioned but still
+    leased: the spawn must fail gracefully (and retry later), never crash
+    the composer tick."""
+    plane = _hybrid_plane()
+    comp = HybridComposer(plane, workers={}, worker_batch=8)
+    asc = comp.attach_autoscaler(
+        [_policy(max_replicas=3, scale_up_step=3)],
+        quotas={"onprem-a": 1, "master": 0}, preferred=("onprem-a",))
+    plane.fabric.partition_cluster("cloud-a")
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python") for i in range(60)]))
+    for _ in range(40):
+        comp.tick()
+        if comp.scheduler.dag_done("d", probe=False):
+            break
+    assert comp.scheduler.dag_success("d")
+    assert any(e[2] == "spawn_failed" for e in asc.events)
+    assert all(e[4] != "cloud-a" for e in asc.events if e[2] == "scale_up")

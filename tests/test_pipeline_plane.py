@@ -409,6 +409,8 @@ def test_pipeline_still_completes_with_depth_publication():
     ])
     comp.add_dag(dag)
     assert comp.run_dag("run", max_ticks=60)
-    # the drained queues ended at zero depth in the published view
-    for depth in plane.dispatcher.queue_depths().values():
-        assert depth["ready"] == 0 and depth["inflight"] == 0
+    # the drained queues were tombstoned out of the published view entirely —
+    # no stale 0/0 keys linger once a queue empties
+    assert plane.dispatcher.queue_depths() == {}
+    assert plane.overwatch.handle(
+        {"op": "range", "prefix": "/queues/"})["items"] == {}
