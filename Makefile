@@ -21,7 +21,10 @@ bench-check:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check
 
 # CI variant: only the suites whose gated ratios are deterministic counts
-# (RPCs per task, fabric-clock ticks) — control_plane's flatness ratios are
-# wall-clock microseconds, too noisy to gate on shared CI runners.
+# (RPCs per task, fabric-clock ticks, simulated byte ledgers) —
+# control_plane's flatness ratios are wall-clock microseconds, too noisy to
+# gate on shared CI runners, but its locality block (cross-boundary bytes
+# per remote read, replica fan-out on/off) is deterministic and gated here
+# via the suite:part spec.
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality

@@ -12,8 +12,15 @@ Only ratio-of-ratios is compared — absolute microseconds/walltimes vary with
 the host, the growth shape does not. Suites without a committed file (or
 without ``run_json``) are skipped.
 
+A suite spec may name a single payload PART as ``suite:part`` (e.g.
+``control_plane:locality``): only the committed ratios under that top-level
+key are gated, and the fresh numbers come from the suite's
+``run_json_<part>()`` — so CI can gate a deterministic sub-block (byte
+counts) without paying for, or flaking on, the suite's wall-clock sweeps.
+
   PYTHONPATH=src python -m benchmarks.check                 # all gated suites
   PYTHONPATH=src python -m benchmarks.check pipeline_plane  # one suite
+  PYTHONPATH=src python -m benchmarks.check control_plane:locality
   ... --dir DIR   # where the committed BENCH_*.json live (default ".")
 """
 from __future__ import annotations
@@ -62,39 +69,56 @@ def _incomplete_runs(payload, path="") -> List[str]:
     return out
 
 
-def check_suite(name: str, committed_dir: str) -> List[str]:
-    """Return a list of failure messages (empty = pass) for one suite."""
+def check_suite(spec: str, committed_dir: str) -> List[str]:
+    """Return a list of failure messages (empty = pass) for one suite spec
+    (``name`` or ``name:part``)."""
+    name, _, part = spec.partition(":")
     committed_path = os.path.join(committed_dir, f"BENCH_{name}.json")
     if not os.path.exists(committed_path):
-        print(f"{name}: no committed {committed_path}, skipping")
+        print(f"{spec}: no committed {committed_path}, skipping")
         return []
     with open(committed_path) as f:
         committed = json.load(f)
+    if part:
+        # an explicitly named part is a promise: its absence (typo'd spec,
+        # stale committed file) must FAIL, not silently gate nothing
+        if part not in committed:
+            return [f"{spec}: committed {committed_path} has no "
+                    f"'{part}' block"]
+        committed = {part: committed[part]}
     baseline = {p: (d, v) for p, d, v in _collect(committed)}
     if not baseline:
-        print(f"{name}: committed payload has no gated ratios, skipping")
+        if part:
+            return [f"{spec}: '{part}' block has no gated ratios"]
+        print(f"{spec}: committed payload has no gated ratios, skipping")
         return []
     mod = __import__(f"benchmarks.{name}", fromlist=["run_json"])
-    fresh_payload = mod.run_json()
+    if part:
+        fn = getattr(mod, f"run_json_{part}", None)
+        if fn is None:
+            return [f"{spec}: benchmarks.{name} has no run_json_{part}()"]
+        fresh_payload = {part: fn()}
+    else:
+        fresh_payload = mod.run_json()
     fresh = {p: v for p, _, v in _collect(fresh_payload)}
     failures: List[str] = [
-        f"{name}: run did not complete (ok=false) at {p}"
+        f"{spec}: run did not complete (ok=false) at {p}"
         for p in _incomplete_runs(fresh_payload)]
     for path, (direction, committed_v) in sorted(baseline.items()):
         fresh_v = fresh.get(path)
         if fresh_v is None:
-            failures.append(f"{name}: {path} missing from fresh run")
+            failures.append(f"{spec}: {path} missing from fresh run")
             continue
         if direction == "lower":
             ok = fresh_v <= committed_v * TOLERANCE
         else:
             ok = fresh_v >= committed_v / TOLERANCE
         status = "ok" if ok else "REGRESSED"
-        print(f"{name}: {path} committed={committed_v:.4g} "
+        print(f"{spec}: {path} committed={committed_v:.4g} "
               f"fresh={fresh_v:.4g} ({direction} is better) {status}")
         if not ok:
             failures.append(
-                f"{name}: {path} regressed >20%: committed {committed_v:.4g} "
+                f"{spec}: {path} regressed >20%: committed {committed_v:.4g} "
                 f"-> fresh {fresh_v:.4g}")
     return failures
 

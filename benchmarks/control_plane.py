@@ -14,6 +14,10 @@ the management-plane numbers a production deployment is sized with).
   * recovery storm: watch-callback invocations when a cluster holding 5k jobs
     dies — O(mutations) with synchronous notify, O(watchers) with coalesced
     batch delivery
+  * locality block: cross-boundary bytes per remote telemetry/depth read,
+    round-trip baseline vs per-cluster replica fan-out — DETERMINISTIC byte
+    counts, gated in CI (``benchmarks.check control_plane:locality``); the
+    fan-out's acceptance bar is a >= 5x bytes/read cut at 256 clusters
   * configuration-phase cost: Algorithm 5 runtime + messages for growing S
   * failure recovery: ticks from partition to re-dispatch
 
@@ -33,10 +37,21 @@ from repro.core.service_graph import AppSpec, Pod, Service
 
 SWEEP_SCALES = (2, 8, 32, 64, 128, 256)
 JOBS_PER_CLUSTER = 20
-# sharded sweep: 4 shards + coalesced watches, 1024 clusters / ~50k jobs on top
+# sharded sweep: 4 shards + coalesced watches, 1024 clusters / ~64k jobs on
+# top — pushed past the 50k point once replica fan-out stopped remote readers
+# from hammering the primary
 SHARDED_SWEEP_SCALES = (32, 256, 1024)
-SHARDED_JOBS_PER_CLUSTER = 49            # 1024 * 49 = 50,176 jobs
+SHARDED_JOBS_PER_CLUSTER = 64            # 1024 * 64 = 65,536 jobs
 SHARDED_OW_SHARDS = 4
+
+# locality block: remote telemetry/depth readers, replica fan-out off vs on
+LOCALITY_SCALES = (8, 64, 256)
+LOCALITY_TICKS = 6                       # heartbeat/ship rounds measured
+# remote reads per cluster per tick: agent telemetry probes + per-queue
+# worker depth checks + fleet observers — the many-readers regime the
+# fan-out exists for (one ship amortizes across ALL of a cluster's readers)
+LOCALITY_READS_PER_TICK = 16
+LOCALITY_QUEUES = 8                      # published /queues/<name> rows
 
 # Pre-overhaul numbers (seed implementation, same sweep, same machine class):
 # per-op cost grew ~14x from 32 to 256 clusters because every dispatch sorted
@@ -181,7 +196,8 @@ def run_sweep(scales=SWEEP_SCALES) -> dict:
     key = tuple(scales)
     if key in _SWEEP_CACHE:
         return _SWEEP_CACHE[key]
-    rows = [sweep_point(n) for n in scales]
+    rows = [_median_point(n, JOBS_PER_CLUSTER, ow_shards=1,
+                          coalesce_watches=False) for n in scales]
     by_n = {r["clusters"]: r for r in rows}
     flat = {}
     if 32 in by_n and 256 in by_n:
@@ -195,12 +211,15 @@ def run_sweep(scales=SWEEP_SCALES) -> dict:
 
 
 def _median_point(n: int, jobs_per_cluster: int, ow_shards: int,
-                  trials: int = 5) -> dict:
+                  trials: int = 5, coalesce_watches: bool = True) -> dict:
     """Per-metric median over independently constructed planes: host jitter
     on shared machines spans whole seconds, so repeating inside one plane
-    (best-of chunks) cannot filter a slow window that covers a whole point."""
+    (best-of chunks) cannot filter a slow window that covers a whole point.
+    Both sweeps (plain and sharded) run through this — single-plane points
+    made the plain sweep's flatness ratios swing ±30% run to run."""
     samples = [sweep_point(n, jobs_per_cluster, ow_shards=ow_shards,
-                           coalesce_watches=True) for _ in range(trials)]
+                           coalesce_watches=coalesce_watches)
+               for _ in range(trials)]
     row = dict(samples[0])
     for metric in ("overwatch_range_us", "dispatch_us",
                    "submit_many_per_job_us", "heartbeat_us"):
@@ -230,6 +249,100 @@ def run_sharded_sweep(scales=SHARDED_SWEEP_SCALES,
               "ow_shards": ow_shards, "rows": rows, "flatness": flat}
     _SWEEP_CACHE[key] = result
     return result
+
+
+# ------------------------------------------------------------ locality block
+def bench_locality_point(n_clusters: int, fanout: bool,
+                         ticks: int = LOCALITY_TICKS,
+                         reads_per_tick: int = LOCALITY_READS_PER_TICK) -> dict:
+    """Cross-boundary bytes per remote read with and without replica fan-out.
+
+    Workload: every remote cluster's agent probes fleet telemetry and the
+    published queue-depth view ``reads_per_tick`` times per tick while the
+    fleet heartbeats (every telemetry row churns every tick — the worst case
+    for delta shipping). Byte counts are DETERMINISTIC (simulated fabric, both
+    request and response accounted), so the reduction ratio is CI-gateable.
+
+    ``fanout=False``: every read round-trips through gateway channels to the
+    primary and hauls the full directory back across the boundary.
+    ``fanout=True``: the master ships each cluster one coalesced delta
+    envelope per tick and all in-bound reads are replica-local — the shipped
+    envelopes are the only read-path cross-boundary traffic.
+    """
+    plane = ManagementPlane(message_log_limit=0, op_log_limit=1_000,
+                            coalesce_watches=True, replica_fanout=fanout)
+    plane.add_cluster("master", is_master=True)
+    for i in range(n_clusters - 1):
+        plane.add_cluster(f"c{i}")
+    ow = plane.agents["master"].ow
+    for k in range(LOCALITY_QUEUES):     # a composer-like depth publisher
+        ow.put(f"/queues/fam{k}", {"ready": 10 * (k + 1), "inflight": k,
+                                   "clock": 0.0})
+    plane.tick(n=2)                      # settle; first ships land
+    fabric = plane.fabric
+    base_cross = fabric.cross_cluster_bytes()
+    base_ships = dict(plane.shipper.stats) if fanout else {}
+    agents = [plane.agents[f"c{i}"] for i in range(n_clusters - 1)]
+    reads = 0
+    per_agent = max(reads_per_tick // 2, 1)
+    for _ in range(ticks):
+        plane.tick()
+        for agent in agents:
+            for _ in range(per_agent):
+                agent.fleet_telemetry(max_lag=2.0)
+                agent.queue_depths(max_lag=2.0)
+                reads += 2
+    cross = fabric.cross_cluster_bytes() - base_cross
+    row = {"clusters": n_clusters, "reads": reads,
+           "cross_bytes": cross,
+           "cross_bytes_per_read": cross / max(reads, 1),
+           "locality_ratio": fabric.locality_ratio()}
+    if fanout:
+        # window-scoped like cross_bytes, so the recorded ship traffic is
+        # directly comparable to (and bounded by) the cross-byte delta
+        row["replica_ships"] = {k: v - base_ships.get(k, 0)
+                                for k, v in plane.shipper.stats.items()}
+    return row
+
+
+def run_locality(scales=LOCALITY_SCALES) -> dict:
+    """Before/after fan-out at each scale + the gated reduction ratios.
+
+    The ``gains`` entries (HIGHER is better, guarded by ``make bench-check``
+    and the CI ``control_plane:locality`` gate) are the cross-boundary
+    bytes-per-read reduction factors; the acceptance bar for the overhaul is
+    >= 5x at the 256-cluster point.
+    """
+    key = ("locality", tuple(scales))
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    rows = []
+    gains = {}
+    for n in scales:
+        baseline = bench_locality_point(n, fanout=False)
+        fanout = bench_locality_point(n, fanout=True)
+        reduction = (baseline["cross_bytes_per_read"]
+                     / max(fanout["cross_bytes_per_read"], 1e-9))
+        rows.append({"clusters": n, "baseline": baseline, "fanout": fanout,
+                     "cross_bytes_per_read_reduction": reduction})
+        # the locality_ratio of each mode is RECORDED in the rows but not
+        # gated: replica-local reads bypass the fabric entirely (0 bytes on
+        # either ledger), so fan-out lowers the ratio while lowering absolute
+        # cross traffic — bytes/read is the honest gate
+        gains[f"cross_bytes_per_read_reduction_{n}"] = reduction
+    result = {"label": "remote telemetry/depth reads: round-trip vs "
+                       "per-cluster replica fan-out",
+              "reads_per_cluster_per_tick": LOCALITY_READS_PER_TICK,
+              "ticks": LOCALITY_TICKS, "rows": rows, "gains": gains}
+    _SWEEP_CACHE[key] = result
+    return result
+
+
+def run_json_locality() -> dict:
+    """The locality block alone — the deterministic CI gate's entry point
+    (``benchmarks.check control_plane:locality``) skips the wall-clock
+    sweeps entirely."""
+    return run_locality()
 
 
 # ----------------------------------------------------------- recovery storm
@@ -346,6 +459,14 @@ def run() -> List[tuple]:
     for label in ("sync", "coalesced"):
         rows.append((f"storm_watch_callbacks[{label},{storm['jobs']}jobs]",
                      float(storm[label]["watch_callbacks"])))
+    for r in run_locality()["rows"]:
+        tag = f"[{r['clusters']}cl]"
+        rows.append((f"locality_bytes_per_read_baseline{tag}",
+                     r["baseline"]["cross_bytes_per_read"]))
+        rows.append((f"locality_bytes_per_read_fanout{tag}",
+                     r["fanout"]["cross_bytes_per_read"]))
+        rows.append((f"locality_reduction{tag}",
+                     r["cross_bytes_per_read_reduction"]))
     rows += bench_configuration_phase(8, 4)
     rows += bench_configuration_phase(32, 4)
     rows += bench_failure_recovery()
@@ -357,6 +478,7 @@ def run_json() -> dict:
     return {"before": SEED_BASELINE, "after": run_sweep(),
             "after_sharded": run_sharded_sweep(),
             "storm": bench_recovery_storm(),
+            "locality": run_locality(),
             "ops": [{"name": n, "us_per_call": v}
                     for n, v in bench_plane_ops(8)],
             "recovery": dict(bench_failure_recovery())}

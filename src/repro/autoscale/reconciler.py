@@ -27,6 +27,14 @@ plane. Each ``reconcile()`` pass, per policy family:
 The reconciler touches clusters only through the dispatcher (submit/retire)
 and the composer (materializing/removing the local ``PipelineWorker``) —
 never a cluster-direct RPC, keeping the paper's plane split intact.
+
+Locality: every read in the loop — the depth view, cluster membership,
+placements, statuses — is a watch-materialized dispatcher view, i.e.
+master-LOCAL state maintained from the overwatch event stream; an inventory
+sync never issues a cross-boundary round-trip. The published
+``/autoscale/<family>`` state rides the replica fan-out (it is in
+``REPLICA_PREFIXES``), so remote observers watch fleet trajectories off
+their cluster-local replica at zero per-read cross-boundary cost too.
 """
 from __future__ import annotations
 

@@ -8,6 +8,12 @@ Responsibilities, mapped 1:1 from the paper:
     track execution;
   * health/telemetry — lease-backed registration in the overwatch plus periodic
     heartbeats carrying load, job progress and step-rate telemetry.
+  * replica hosting (the fan-out overhaul) — with ``enable_replica()`` the
+    agent hosts a cluster-local ``LocalReplica`` fed by the master's shipped
+    ``replica_batch`` envelopes; its overwatch client then serves
+    ``range_stale`` reads (``fleet_telemetry``/``queue_depths`` below, worker
+    depth gates, any telemetry consumer on this cluster) from local state —
+    zero cross-boundary bytes per read while the ships keep it within bound.
 
 The agent is an ordinary fabric endpoint: everything it says to the master-hosted
 overwatch crosses the thin boundary and is byte-accounted. A partitioned cluster
@@ -58,6 +64,7 @@ class ControlAgent:
         self.addr: Address = (f"10.{idx}.{AGENT_IP_SUFFIX}", AGENT_PORT)
         fabric.register_handler(cluster, self.addr, self._handle)
         self.ow: Optional[OverwatchClient] = None
+        self.replica = None                  # LocalReplica (fan-out mode)
         # telemetry envelope size is shape-constant (fixed keys, numeric
         # values): computed on the first heartbeat, reused forever after so
         # the fabric's byte accounting never re-walks the hottest message
@@ -80,7 +87,8 @@ class ControlAgent:
             shard_addrs = ([(OVERWATCH_IP, OVERWATCH_PORT + 1 + i)
                             for i in range(n)] if n > 1 else None)
             self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
-                                      self.master, shard_addrs=shard_addrs)
+                                      self.master, shard_addrs=shard_addrs,
+                                      replica=self.replica)
             return
         eport = GW.EPORT_BASE + OW_TUNNEL_RANK
         iport = GW.IPORT_BASE + OW_TUNNEL_RANK
@@ -104,7 +112,19 @@ class ControlAgent:
                 shard_vias.append((self.state.egw_ip, s_eport))
         self.ow = OverwatchClient(self.fabric, self.cluster, self.agent_id,
                                   self.master, via=(self.state.egw_ip, eport),
-                                  shard_vias=shard_vias)
+                                  shard_vias=shard_vias,
+                                  replica=self.replica)
+
+    def enable_replica(self, prefixes=None):
+        """Host a cluster-local overwatch replica (fan-out mode): shipped
+        ``replica_batch`` deltas land here, and this agent's overwatch client
+        serves in-bound ``range_stale`` reads from it without touching the
+        fabric. Returns the replica (the shipper registers it master-side)."""
+        from repro.core.replica import REPLICA_PREFIXES, LocalReplica
+        self.replica = LocalReplica(prefixes or REPLICA_PREFIXES)
+        if self.ow is not None:
+            self.ow.replica = self.replica
+        return self.replica
 
     def register(self) -> None:
         """Lease-backed registration (overwatch = discovery + failure detection)."""
@@ -148,6 +168,11 @@ class ControlAgent:
             for jid in list(self.jobs):
                 self.cancel_job(jid)
             return {"ok": True}
+        if kind == "replica_batch":
+            if self.replica is None:
+                return {"ok": False, "error": "no replica hosted here"}
+            applied = self.replica.apply_ship(msg["batch"])
+            return {"ok": True, "applied_rev": applied}
         return {"ok": False, "error": f"unknown message {kind}"}
 
     def accept_job(self, job: dict) -> dict:
@@ -217,6 +242,20 @@ class ControlAgent:
         except (DeliveryError, RuntimeError):
             self.missed_heartbeats += 1
         self._schedule_heartbeat()
+
+    # ------------------------------------------------------ local-path reads
+    def fleet_telemetry(self, max_lag: float = 2.0) -> Dict[str, dict]:
+        """Every cluster's last telemetry row — served from the local replica
+        when fan-out keeps it within ``max_lag``, primary round-trip
+        otherwise (the remote telemetry probe of the locality benchmark)."""
+        items = self.ow.range_stale("/telemetry/", max_lag=max_lag)
+        return {k[len("/telemetry/"):]: v for k, v in items.items()}
+
+    def queue_depths(self, max_lag: float = 2.0) -> Dict[str, dict]:
+        """Published ``/queues/<name>`` depth view — the worker-side depth
+        check, local under fan-out like ``fleet_telemetry``."""
+        items = self.ow.range_stale("/queues/", max_lag=max_lag)
+        return {k[len("/queues/"):]: v for k, v in items.items()}
 
     def _report_job(self, jid: str) -> None:
         rec = self.jobs[jid]

@@ -308,6 +308,12 @@ class Dispatcher:
                 # re-broadcast the spec on every pod change)
                 continue
 
+    def send_agent(self, cluster: str, msg: dict) -> dict:
+        """Public master->agent RPC over the dispatch relay (the replica
+        shipper's path). Raises ``KeyError`` for an unknown/tombstoned
+        cluster and ``DeliveryError`` when the relay is unreachable."""
+        return self._send_agent(cluster, msg)
+
     def _send_agent(self, cluster: str, msg: dict) -> dict:
         info = self._clusters[cluster]          # one lookup, zero round-trips
         addr = tuple(info["agent_addr"])

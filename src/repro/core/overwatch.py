@@ -43,6 +43,12 @@ Architecture (the sharding overhaul):
     stream. ``range_stale(prefix, max_lag)`` serves from it whenever the
     replica lags the primary by at most ``max_lag`` fabric-clock units and
     catches up (one flush) otherwise; linearizable reads stay on the primary.
+    The snapshot machinery lives in ``ReplicaState``, shared with the
+    per-cluster ``repro.core.replica.LocalReplica`` (the fan-out overhaul):
+    the master ships each cluster one coalesced delta envelope per sweep and
+    ``OverwatchClient.range_stale`` serves in-bound reads from the local
+    snapshot with ZERO fabric traffic, falling back to this primary-side
+    replica only when the local one is out of bound or absent.
 
 Coalesced watch delivery (``coalesce_watches=True``): mutations enqueue
 ``(event, key, value, rev)`` into per-shard batches instead of firing callbacks
@@ -181,10 +187,13 @@ class ShardRouter:
     next vnode clockwise, so every shard owns a set of contiguous hash-ring
     slices and resizing moves only ~1/N of the segments. crc32 keeps placement
     deterministic across processes (clients compute the same routing without
-    asking the server).
+    asking the server). ``seed`` namespaces the ring so other sharded planes
+    (the per-family broker router) reuse the same discipline without their
+    placements being correlated with the overwatch's.
     """
 
-    def __init__(self, num_shards: int, vnodes: int = 32):
+    def __init__(self, num_shards: int, vnodes: int = 32,
+                 seed: str = "overwatch-shard"):
         # ring parameters are part of the wire contract: OverwatchClient
         # rebuilds this ring from the shard COUNT alone (no topology
         # exchange), so the vnode count and seed-string format below must
@@ -193,7 +202,7 @@ class ShardRouter:
         ring: List[Tuple[int, int]] = []
         for s in range(num_shards):
             for v in range(vnodes):
-                h = zlib.crc32(f"overwatch-shard-{s}/vnode-{v}".encode())
+                h = zlib.crc32(f"{seed}-{s}/vnode-{v}".encode())
                 ring.append((h & 0xFFFFFFFF, s))
         ring.sort()
         self._ring = ring
@@ -380,26 +389,22 @@ class OverwatchShard:
         return {k: self._kv[k][0] for k in self._keys[lo:hi]}
 
 
-class OverwatchReplica:
-    """Bounded-staleness read replica: a revision-tagged snapshot kept current
-    by subscribing a batch watcher to every shard. With coalescing on it lags
-    the primary by at most one flush interval; ``range_stale`` decides whether
-    that lag is acceptable or forces a catch-up."""
+class ReplicaState:
+    """A revision-tagged snapshot maintained from a watch event stream — the
+    shared substrate of the master-side ``OverwatchReplica`` and the
+    per-cluster ``repro.core.replica.LocalReplica``. Applying events is O(1)
+    per event (the sorted read index folds lazily, like the shard's); applying
+    an already-applied event is idempotent, so cumulative re-delivery after a
+    channel heal converges without deduplication."""
 
-    def __init__(self, host: "OverwatchService"):
+    def __init__(self):
         self._kv: Dict[str, Any] = {}
         self._keys: List[str] = []
         self._added: set = set()             # lazy index edits, like the shard
         self._removed: set = set()
         self.applied_rev = 0
-        for shard in host.shards:            # host flushed pending beforehand
-            for k, (v, rev) in shard._kv.items():
-                self._kv[k] = v
-        self._keys = sorted(self._kv)
-        self.applied_rev = host._rev
-        host._register(("", self._apply_batch), batch=True)
 
-    def _apply_batch(self, events: List[tuple]) -> None:
+    def apply_events(self, events: List[tuple]) -> None:
         # O(1) per event: a 100k-event catch-up batch must not pay a sorted
         # insert (O(n) memmove) per key inside the read barrier
         for event, key, value, rev in events:
@@ -413,12 +418,33 @@ class OverwatchReplica:
                     self._added.add(key)
                     self._removed.discard(key)
                 self._kv[key] = value
-            self.applied_rev = rev
+            if rev > self.applied_rev:
+                self.applied_rev = rev
+
+    def get(self, key: str) -> Any:
+        """Point read off the snapshot (the worker depth-gate path)."""
+        return self._kv.get(key)
 
     def range_items(self, prefix: str) -> Dict[str, Any]:
         self._keys = _fold_index_edits(self._keys, self._added, self._removed)
         lo, hi = _prefix_slice(self._keys, prefix)
         return {k: self._kv[k] for k in self._keys[lo:hi]}
+
+
+class OverwatchReplica(ReplicaState):
+    """Master-side bounded-staleness read replica: kept current by subscribing
+    a batch watcher to every shard. With coalescing on it lags the primary by
+    at most one flush interval; ``range_stale`` decides whether that lag is
+    acceptable or forces a catch-up."""
+
+    def __init__(self, host: "OverwatchService"):
+        super().__init__()
+        for shard in host.shards:            # host flushed pending beforehand
+            for k, (v, rev) in shard._kv.items():
+                self._kv[k] = v
+        self._keys = sorted(self._kv)
+        self.applied_rev = host._rev
+        host._register(("", self.apply_events), batch=True)
 
 
 class OverwatchService:
@@ -688,6 +714,13 @@ class OverwatchClient:
     master-local clients) or tunnel (``shard_vias``, for remote clusters);
     lease ops and fan-out ranges use the front-end. Without shard targets the
     client behaves exactly like the unsharded original.
+
+    Replica-aware when given a per-cluster ``replica`` (the fan-out overhaul):
+    ``range_stale`` is served straight from the local snapshot — zero fabric
+    traffic — whenever the replica covers the prefix and its shipped-batch lag
+    is within the caller's ``max_lag``; otherwise the read falls back to the
+    primary round-trip exactly as before. All other ops (linearizable reads,
+    every mutation, leases) always cross to the primary.
     """
 
     def __init__(self, fabric: Fabric, src_cluster: str, src_id: str,
@@ -695,7 +728,8 @@ class OverwatchClient:
                  addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
                  via: Optional[Address] = None,
                  shard_addrs: Optional[List[Address]] = None,
-                 shard_vias: Optional[List[Address]] = None):
+                 shard_vias: Optional[List[Address]] = None,
+                 replica=None):
         self.fabric = fabric
         self.src_cluster = src_cluster
         self.src_id = src_id
@@ -705,6 +739,7 @@ class OverwatchClient:
         self.via = via
         self.shard_addrs = shard_addrs
         self.shard_vias = shard_vias
+        self.replica = replica          # repro.core.replica.LocalReplica
         # default ring parameters MUST match the service's (wire contract —
         # the client derives placement from the shard count alone)
         n = len(shard_addrs or shard_vias or ())
@@ -769,7 +804,13 @@ class OverwatchClient:
         return self._call({"op": "range", "prefix": prefix})["items"]
 
     def range_stale(self, prefix: str, max_lag: float) -> Dict[str, Any]:
-        """Bounded-staleness range off the read replica (telemetry path)."""
+        """Bounded-staleness range (telemetry path): the local per-cluster
+        replica when it covers the prefix within ``max_lag``, else the
+        primary's read replica over the fabric."""
+        rep = self.replica
+        if (rep is not None and rep.covers(prefix)
+                and rep.lag(self.fabric.clock) <= max_lag):
+            return rep.range_items(prefix)
         return self._call({"op": "range_stale", "prefix": prefix,
                            "max_lag": max_lag})["items"]
 

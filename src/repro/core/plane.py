@@ -60,7 +60,9 @@ class ManagementPlane:
                  message_log_limit: Optional[int] = 100_000,
                  op_log_limit: Optional[int] = None,
                  ow_shards: int = 1,
-                 coalesce_watches: bool = False):
+                 coalesce_watches: bool = False,
+                 replica_fanout: bool = False,
+                 replica_prefixes=None):
         self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
         self._idx = itertools.count(1)
@@ -71,6 +73,20 @@ class ManagementPlane:
                                           num_shards=self.ow_shards,
                                           coalesce_watches=coalesce_watches)
         self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
+        # replica fan-out (off by default — behavior-identical without it):
+        # every non-master cluster hosts a LocalReplica fed by one coalesced
+        # delta envelope per sweep, and remote range_stale reads go local
+        self.shipper = None
+        self._replica_prefixes = replica_prefixes
+        if replica_fanout:
+            from repro.core.replica import REPLICA_PREFIXES, ReplicaShipper
+            self._replica_prefixes = tuple(replica_prefixes
+                                           or REPLICA_PREFIXES)
+            self.shipper = ReplicaShipper(self.overwatch,
+                                          self.dispatcher.send_agent,
+                                          prefixes=self._replica_prefixes)
+            # a tombstoned cluster stops accumulating ship backlog
+            self.dispatcher.on_cluster_down(self.shipper.unregister)
         self.spec: Optional[AppSpec] = None
         self._job_ids = itertools.count(1)
         # master hosts its own agent (idx 0)
@@ -91,6 +107,11 @@ class ManagementPlane:
                         else agent.state)
         agent.bootstrap(master_state)
         agent.register()
+        if self.shipper is not None and not is_master:
+            # master-cluster reads are already fabric-local; remote clusters
+            # get a replica seeded by the first ship (next tick)
+            agent.enable_replica(self._replica_prefixes)
+            self.shipper.register(name)
         return agent
 
     @property
@@ -148,6 +169,8 @@ class ManagementPlane:
         for _ in range(n):
             self.fabric.tick(dt)
             self.overwatch.sweep()
+            if self.shipper is not None:
+                self.shipper.ship_all()      # one delta envelope per cluster
 
     def run_until_done(self, job_ids: List[str], max_ticks: int = 200) -> bool:
         for _ in range(max_ticks):
@@ -160,9 +183,12 @@ class ManagementPlane:
     # ------------------------------------------------------------------ observation
     def boundary_report(self) -> dict:
         f = self.fabric
-        return {
+        out = {
             "cross_cluster_bytes": f.cross_cluster_bytes(),
             "local_bytes": sum(f.local_bytes.values()),
             "locality_ratio": f.locality_ratio(),
             "per_edge": dict(f.cross_bytes),
         }
+        if self.shipper is not None:
+            out["replica_ships"] = dict(self.shipper.stats)
+        return out

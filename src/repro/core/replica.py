@@ -1,0 +1,259 @@
+"""Per-cluster overwatch replica fan-out (the cross-boundary locality overhaul).
+
+The paper's core scalability claim is that the hybrid plane keeps
+cross-boundary traffic THIN: local control planes act on local state while the
+global plane only ships deltas (§4). Before this module, every remote read —
+an agent probing fleet telemetry, a worker checking queue depth, anything
+calling ``range_stale`` from a private cluster — round-tripped through gateway
+channels to the master-side overwatch, paying the full request+response byte
+cost per read. Now the master ships each cluster ONE coalesced, revision-
+tagged delta envelope per sweep, and remote reads are served from the local
+snapshot for free.
+
+Two halves:
+
+  * ``LocalReplica`` — hosted by each control agent: a ``ReplicaState``
+    snapshot (same apply/read machinery as the master-side read replica)
+    restricted to a prefix set, plus the freshness bookkeeping
+    (``synced_at``, the master clock of the last applied ship) that lets
+    ``OverwatchClient.range_stale`` decide locally whether the caller's
+    ``max_lag`` is satisfied. Within bound: a local dict read, zero fabric
+    traffic. Out of bound (ships stopped — channel dead, cluster partitioned):
+    transparent fallback to the primary round-trip, never a silently staler
+    answer.
+
+  * ``ReplicaShipper`` — master-side: subscribes one catch-all batch watcher
+    to the overwatch and maintains ONE shared, key-coalesced delta log (only
+    the latest state of a key matters to a snapshot) with a revision-ordered
+    index, plus a per-cluster cumulative-ack horizon (``acked_rev``).
+    Event intake is O(events) however many clusters are fed. ``ship_all()``
+    — called on the plane's sweep cadence — sends each cluster one envelope
+    carrying every log entry above ITS horizon, over the existing
+    master->agent dispatch relay (the same gateway channel jobs ride); the
+    horizon advances only on a confirmed apply, so a failed ship (channel
+    death, partition) costs nothing and the first ship after heal carries
+    everything missed — the replica converges from exactly where it left
+    off. The log compacts below the minimum horizon across feeds, so an
+    up-to-date fleet keeps it at roughly one sweep's churn. Empty ships
+    still go out: they are the freshness beacon that distinguishes "nothing
+    changed" from "cut off", and they cost a few dozen bytes.
+
+Byte-ledger truth: shipped envelopes are the ONLY cross-boundary cost of the
+fan-out (measured in ``Fabric.cross_bytes`` like all channel traffic); local
+replica reads touch no fabric path at all. ``benchmarks/control_plane.py``'s
+locality block gates the resulting cross-bytes-per-read win.
+"""
+from __future__ import annotations
+
+import bisect
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.overwatch import OverwatchService, ReplicaState
+from repro.core.transport import DeliveryError, Envelope
+
+# The remote-read vocabulary: discovery, telemetry, queue depths, autoscaler
+# fleet state. Deliberately excludes the high-churn per-entity ``/jobs/``
+# keyspace — placements/statuses are the dispatcher's (master-local) concern,
+# and shipping them to every cluster would be the fan-out's own traffic storm.
+REPLICA_PREFIXES: Tuple[str, ...] = ("/clusters/", "/telemetry/", "/queues/",
+                                     "/autoscale/")
+
+
+class LocalReplica(ReplicaState):
+    """A cluster-local, prefix-scoped overwatch snapshot fed by shipped
+    deltas. ``lag`` is measured against the master clock stamped into the
+    last applied ship — infinite until the first ship lands, so a replica
+    that has never synced can never satisfy a staleness bound."""
+
+    def __init__(self, prefixes: Tuple[str, ...] = REPLICA_PREFIXES):
+        super().__init__()
+        self.prefixes = tuple(prefixes)
+        self.synced_at: Optional[float] = None
+        self.stats: Counter = Counter()      # batches/events applied
+
+    def covers(self, prefix: str) -> bool:
+        """True when every key the prefix could match is inside the shipped
+        set (a subscribed prefix of ``""`` covers everything)."""
+        return any(prefix.startswith(p) for p in self.prefixes)
+
+    def lag(self, now: float) -> float:
+        if self.synced_at is None:
+            return float("inf")
+        return now - self.synced_at
+
+    def apply_ship(self, batch: dict) -> int:
+        """Apply one shipped delta envelope; returns the applied revision
+        (the cumulative ack the shipper records)."""
+        self.apply_events(batch["events"])
+        if batch["rev"] > self.applied_rev:
+            self.applied_rev = batch["rev"]
+        self.synced_at = batch["clock"]
+        self.stats["batches"] += 1
+        self.stats["events"] += len(batch["events"])
+        return self.applied_rev
+
+
+class _Feed:
+    """One cluster's feed state: the cumulative-ack horizon (every log entry
+    above it is owed to this cluster) plus, until the first confirmed ship,
+    the bootstrap snapshot of the shipped prefixes."""
+
+    __slots__ = ("acked_rev", "seed")
+
+    def __init__(self, acked_rev: int, seed: Dict[str, tuple]):
+        self.acked_rev = acked_rev
+        self.seed = seed                      # key -> (event, value, rev)
+
+
+class ReplicaShipper:
+    """Master-side fan-out publisher: one coalesced envelope per cluster per
+    sweep, cumulative-ack resume across channel death and partition."""
+
+    def __init__(self, overwatch: OverwatchService,
+                 send_fn: Callable[[str, dict], dict],
+                 prefixes: Tuple[str, ...] = REPLICA_PREFIXES):
+        self.ow = overwatch
+        self.send_fn = send_fn               # (cluster, msg) -> agent response
+        self.prefixes = tuple(prefixes)
+        self._feeds: Dict[str, _Feed] = {}
+        # the shared delta log: latest state per key + a rev-ordered index so
+        # each ship walks only the entries above that cluster's horizon.
+        # Index entries whose key has since re-coalesced are skipped lazily.
+        self._log: Dict[str, tuple] = {}     # key -> (event, value, rev)
+        self._order: List[Tuple[int, str]] = []        # (rev, key), appended
+        # highest revision the shipper has actually INGESTED — the ack
+        # horizon may never pass it, or events still pending in a coalesced
+        # watch queue would be skipped by every later ship
+        self._seen_rev = 0
+        self.stats: Counter = Counter()
+        overwatch.watch_batch("", self._on_events)
+
+    # ------------------------------------------------------------- membership
+    def register(self, cluster: str) -> None:
+        """Start feeding a cluster: snapshot the shipped prefixes at the
+        current revision — the first successful ship bootstraps the replica
+        from empty, everything after rides the shared log."""
+        rev = self.ow._rev
+        seed: Dict[str, tuple] = {}
+        for p in self.prefixes:
+            items = self.ow.handle({"op": "range", "prefix": p})["items"]
+            for k, v in items.items():
+                seed[k] = ("put", v, rev)
+        self._feeds[cluster] = _Feed(acked_rev=rev, seed=seed)
+
+    def unregister(self, cluster: str) -> None:
+        """Stop feeding (cluster tombstoned): the next compaction is free to
+        drop whatever only this cluster still owed."""
+        self._feeds.pop(cluster, None)
+
+    # ----------------------------------------------------------- event intake
+    def _on_events(self, events: List[tuple]) -> None:
+        """O(matching events), independent of the cluster count."""
+        prefixes = self.prefixes
+        log, order = self._log, self._order
+        for event, key, value, rev in events:
+            if rev > self._seen_rev:
+                self._seen_rev = rev
+            if any(key.startswith(p) for p in prefixes):
+                log[key] = (event, value, rev)
+                order.append((rev, key))
+
+    # --------------------------------------------------------------- shipping
+    def _build_msg(self, feed: _Feed) -> Envelope:
+        """One cluster's envelope: its bootstrap seed (if unconfirmed) plus
+        every log delta above its horizon, revision-ordered."""
+        merged: Dict[str, tuple] = dict(feed.seed) if feed.seed else {}
+        log, order = self._log, self._order
+        lo = bisect.bisect_right(order, (feed.acked_rev, "\U0010ffff"))
+        for rev, key in order[lo:]:
+            ent = log.get(key)
+            if ent is not None and ent[2] == rev:    # else: re-coalesced later
+                merged[key] = ent
+        events = sorted(((event, key, value, rev)
+                         for key, (event, value, rev) in merged.items()),
+                        key=lambda ev: ev[3])
+        # the ack horizon advances only to what this shipper has INGESTED
+        # (or the seed's snapshot revision): stamping the primary's current
+        # rev here would leap past events still pending in a coalesced
+        # watch queue, and later ships would skip them forever
+        batch = {"events": events,
+                 "rev": max(feed.acked_rev, self._seen_rev),
+                 "clock": self.ow.fabric.clock}
+        return Envelope({"kind": "replica_batch", "batch": batch})
+
+    def _ship_msg(self, cluster: str, feed: _Feed, msg: Envelope) -> bool:
+        """Deliver one (possibly shared) envelope. On failure nothing moves —
+        the horizon only advances on a confirmed apply (cumulative ack)."""
+        batch = msg["batch"]
+        try:
+            resp = self.send_fn(cluster, msg)
+        except (DeliveryError, KeyError):
+            # channel dead / cluster partitioned or already forgotten:
+            # nothing applied, nothing to restore — the horizon stands still
+            self.stats["ship_failures"] += 1
+            return False
+        if not resp.get("ok"):
+            self.stats["ship_rejected"] += 1
+            return False
+        feed.acked_rev = resp.get("applied_rev", batch["rev"])
+        feed.seed = {}
+        self.stats["ships"] += 1
+        self.stats["shipped_events"] += len(batch["events"])
+        self.stats["shipped_bytes"] += msg.nbytes
+        return True
+
+    def ship(self, cluster: str) -> bool:
+        """One envelope to one cluster (the single-cluster entry point)."""
+        feed = self._feeds.get(cluster)
+        if feed is None:
+            return False
+        return self._ship_msg(cluster, feed, self._build_msg(feed))
+
+    def ship_all(self) -> int:
+        """The sweep-cadence fan-out: one envelope per registered cluster,
+        then compact the shared log below the laggiest confirmed horizon.
+        Returns how many ships landed. Takes the watch barrier first so a
+        direct caller (tests, an out-of-band flush) ships the log as of the
+        primary's current state, not as of the last flush.
+
+        Feeds sharing an ack horizon (the steady-state fleet: everyone
+        confirmed last sweep's ship) share ONE built-and-sized envelope —
+        the per-sweep build cost is O(distinct horizons x churn), not
+        O(clusters x churn), and the envelope's byte walk happens once."""
+        self.ow.flush_watches()
+        shared: Dict[int, Envelope] = {}
+        landed = 0
+        for cluster in sorted(self._feeds):
+            feed = self._feeds[cluster]
+            if feed.seed:                    # bootstrap: unique by definition
+                msg = self._build_msg(feed)
+            else:
+                msg = shared.get(feed.acked_rev)
+                if msg is None:
+                    msg = shared[feed.acked_rev] = self._build_msg(feed)
+            if self._ship_msg(cluster, feed, msg):
+                landed += 1
+        self._compact()
+        return landed
+
+    def _compact(self) -> None:
+        """Drop log entries every feed has confirmed. With no feeds the log
+        empties outright; with one partitioned cluster it grows only until
+        the lease sweep tombstones (and unregisters) it."""
+        if not self._feeds:
+            if self._order:
+                self._log.clear()
+                self._order.clear()
+            return
+        min_acked = min(f.acked_rev for f in self._feeds.values())
+        order = self._order
+        hi = bisect.bisect_right(order, (min_acked, "\U0010ffff"))
+        if not hi:
+            return
+        log = self._log
+        for rev, key in order[:hi]:
+            ent = log.get(key)
+            if ent is not None and ent[2] == rev:
+                del log[key]
+        del order[:hi]

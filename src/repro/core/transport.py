@@ -16,6 +16,25 @@ lease expiry and heartbeat scheduling in the layers above. Per-edge byte counter
 make the paper's "thin cross-boundary traffic" claim measurable
 (``cross_cluster_bytes`` vs ``local_bytes``), and fault injection (partition a
 cluster, kill a channel) drives the fault-tolerance tests.
+
+Byte accounting covers the full round trip wherever it matters: the request
+payload is charged on every hop it traverses, and on any path that crosses a
+gateway channel the handler's RESPONSE is charged back along the same path
+(sized exactly once at the terminal handler and propagated up the hop stack —
+never re-walked per hop). A fat range response crossing a channel is
+cross-boundary traffic exactly like a fat request, which is what makes
+"serve remote reads from a local replica" a measurable byte win rather than a
+free-response illusion. Purely intra-cluster round trips skip the response
+walk entirely — the cross-boundary ledger is the paper's claim, and sizing
+every local data-plane response would tax the hottest path for a number
+nothing gates.
+
+The send fast path is deliberately lean (this is the hottest function in the
+repo): ACL exemption checks are memoized per source id instead of re-scanning
+the exempt prefixes per message, the per-string/per-envelope byte caches evict
+one entry at a time instead of wholesale (no re-encode storms at the limit),
+``message_log_limit=0`` skips message-tuple construction entirely, and the
+dominant no-forwarding-rule delivery case skips the loop-detection machinery.
 """
 from __future__ import annotations
 
@@ -121,12 +140,22 @@ _DICT_KEYS_CACHE: Dict[Tuple[str, ...], int] = {}
 _CACHE_LIMIT = 65536
 
 
+def _evict_one(cache: dict) -> None:
+    """Drop the oldest entry (dict insertion order — FIFO, not LRU: tracking
+    recency would cost a dict move on every HIT of the hottest path to avoid
+    an occasional ~100ns re-encode; an evicted hot entry simply re-inserts on
+    its next use). Wholesale ``clear()`` at the limit used to force the
+    entire hot vocabulary to re-encode in one thrash storm; one-at-a-time
+    eviction keeps the steady-state hit rate."""
+    cache.pop(next(iter(cache)))
+
+
 def _str_bytes(s: str) -> int:
     n = _STR_BYTES_CACHE.get(s)
     if n is None:
         n = len(s.encode())
         if len(_STR_BYTES_CACHE) >= _CACHE_LIMIT:
-            _STR_BYTES_CACHE.clear()
+            _evict_one(_STR_BYTES_CACHE)
         _STR_BYTES_CACHE[s] = n
     return n
 
@@ -138,7 +167,7 @@ def _dict_bytes(payload: dict) -> int:
         if key_bytes is None:
             key_bytes = sum(_payload_bytes(k) for k in sig)
             if len(_DICT_KEYS_CACHE) >= _CACHE_LIMIT:
-                _DICT_KEYS_CACHE.clear()
+                _evict_one(_DICT_KEYS_CACHE)
             _DICT_KEYS_CACHE[sig] = key_bytes
     except TypeError:                 # unhashable keys: no memoization
         key_bytes = sum(_payload_bytes(k) for k in payload)
@@ -243,8 +272,22 @@ class Fabric:
         """Send from a component (pod/agent) to an in-cluster (ip, port).
 
         Cross-cluster reachability exists ONLY through channels installed on the
-        path via forwarding rules. Returns the handler's response.
+        path via forwarding rules. Returns the handler's response. The request
+        is byte-accounted on every hop; the response is accounted too on any
+        path that crossed a channel.
         """
+        return self._send(src_cluster, src_id, cluster, addr, payload,
+                          _hops, False)[0]
+
+    def _send(self, src_cluster: str, src_id: str, cluster: str,
+              addr: Address, payload: Any, _hops: int,
+              need_rbytes: bool) -> Tuple[Any, int]:
+        """Internal send returning ``(response, response_bytes)`` so that the
+        response is sized exactly once (at the terminal handler) and every
+        hop on the way back charges the propagated number. ``need_rbytes``
+        tells the terminal whether anything upstream will charge the
+        response — entering a channel forces it, a purely-local path skips
+        the walk and returns 0."""
         if _hops > 16:
             raise DeliveryError(f"routing loop at {cluster}:{addr}")
         if src_cluster in self._partitioned or cluster in self._partitioned:
@@ -261,7 +304,9 @@ class Fabric:
 
         nbytes = _payload_bytes(payload)
         self.local_bytes[cluster] += nbytes
-        self.message_log.append((self.clock, src_cluster, src_id, cluster, addr))
+        if self.message_log.limit != 0:   # limit 0: skip tuple construction
+            self.message_log.append(
+                (self.clock, src_cluster, src_id, cluster, addr))
 
         # channel endpoint? hop across the boundary
         ch = self._channels.get((cluster, addr))
@@ -273,33 +318,66 @@ class Fabric:
             o_cluster, o_addr = other
             if o_cluster in self._partitioned:
                 raise DeliveryError(f"cluster partitioned: {o_cluster}")
-            if (cluster, addr) == (ch.cluster_a, ch.addr_a):
+            a_to_b = (cluster, addr) == (ch.cluster_a, ch.addr_a)
+            if a_to_b:
                 ch.bytes_ab += nbytes
             else:
                 ch.bytes_ba += nbytes
             self.cross_bytes[(cluster, o_cluster)] += nbytes
-            return self._deliver_local(o_cluster, o_addr, src_id, payload,
-                                       _hops + 1)
+            resp, rbytes = self._deliver_local(o_cluster, o_addr, src_id,
+                                               payload, _hops + 1, True)
+            # the response re-crosses the channel in the other direction
+            if a_to_b:
+                ch.bytes_ba += rbytes
+            else:
+                ch.bytes_ab += rbytes
+            self.cross_bytes[(o_cluster, cluster)] += rbytes
+            self.local_bytes[cluster] += rbytes
+            return resp, rbytes
 
-        return self._deliver_local(cluster, addr, src_id, payload, _hops)
+        return self._deliver_local(cluster, addr, src_id, payload, _hops,
+                                   need_rbytes)
 
     def _deliver_local(self, cluster: str, addr: Address, src_id: str,
-                       payload: Any, hops: int) -> Any:
+                       payload: Any, hops: int,
+                       need_rbytes: bool) -> Tuple[Any, int]:
+        # hot path: no forwarding rule at the dialed address — straight to the
+        # handler, no loop-detection set, no rule walk
+        fwd = self._forwards.get((cluster, addr))
+        if fwd is None:
+            handler = self._handlers.get((cluster, addr))
+            if handler is None:
+                raise DeliveryError(f"no endpoint at {cluster}:{addr}")
+            resp = handler(payload)
+            if not need_rbytes:          # purely-local round trip: no walk
+                return resp, 0
+            rbytes = _payload_bytes(resp)
+            self.local_bytes[cluster] += rbytes
+            return resp, rbytes
         # follow in-cluster forwarding rules (gateway port maps)
-        seen = set()
-        while (cluster, addr) in self._forwards:
+        seen = {(cluster, addr)}
+        addr = fwd
+        while True:
+            ch = self._channels.get((cluster, addr))
+            if ch is not None:
+                return self._send(cluster, f"gw@{cluster}", cluster, addr,
+                                  payload, hops + 1, need_rbytes)
+            fwd = self._forwards.get((cluster, addr))
+            if fwd is None:
+                break
             if (cluster, addr) in seen:
                 raise DeliveryError(f"forward loop in {cluster} at {addr}")
             seen.add((cluster, addr))
-            addr = self._forwards[(cluster, addr)]
-            ch = self._channels.get((cluster, addr))
-            if ch is not None:
-                return self.send(cluster, f"gw@{cluster}", cluster, addr,
-                                 payload, _hops=hops + 1)
+            addr = fwd
         handler = self._handlers.get((cluster, addr))
         if handler is None:
             raise DeliveryError(f"no endpoint at {cluster}:{addr}")
-        return handler(payload)
+        resp = handler(payload)
+        if not need_rbytes:
+            return resp, 0
+        rbytes = _payload_bytes(resp)
+        self.local_bytes[cluster] += rbytes
+        return resp, rbytes
 
     # ------------------------------------------------------------------ accounting
     def cross_cluster_bytes(self) -> int:
@@ -313,20 +391,43 @@ class Fabric:
 
 
 class AclTable:
-    """Default-deny pod->(ip, port) table (Algorithm 3)."""
+    """Default-deny pod->(ip, port) table (Algorithm 3).
+
+    The exempt-prefix test (infra components: gateways, agents, system pods)
+    used to run ``any(startswith)`` on every ``Fabric.send`` — the single
+    hottest string scan in the plane. It is now resolved once per source id:
+    precomputed at ``allow`` time for ids the table learns about, memoized on
+    first sight for everything else. ``stats['prefix_scans']`` counts actual
+    prefix walks so tests can pin the scan-once property; exemption is a pure
+    function of the id (the prefix tuple is fixed at construction), so the
+    cache never needs invalidation — ``block_all`` only touches the allow set.
+    """
 
     def __init__(self):
         self._allowed: set = set()
         self._exempt_prefixes = ("gw@", "agent@", "system@")
+        self._exempt_cache: Dict[str, bool] = {}
+        self.stats: Counter = Counter()
+
+    def _is_exempt(self, src_id: str) -> bool:
+        e = self._exempt_cache.get(src_id)
+        if e is None:
+            self.stats["prefix_scans"] += 1
+            e = any(src_id.startswith(p) for p in self._exempt_prefixes)
+            if len(self._exempt_cache) >= _CACHE_LIMIT:
+                _evict_one(self._exempt_cache)
+            self._exempt_cache[src_id] = e
+        return e
 
     def allow(self, src_id: str, addr: Address) -> None:
         self._allowed.add((src_id, addr))
+        self._is_exempt(src_id)             # precompute at allow time
 
     def block_all(self, addr: Address) -> None:
         self._allowed = {(s, a) for (s, a) in self._allowed if a != addr}
 
     def allowed(self, src_id: str, addr: Address) -> bool:
-        if any(src_id.startswith(p) for p in self._exempt_prefixes):
+        if self._is_exempt(src_id):
             return True                     # infra components, not app pods
         return (src_id, addr) in self._allowed
 

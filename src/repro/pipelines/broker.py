@@ -47,13 +47,71 @@ create NOTHING — probing a queue name must never materialize broker state.
 ``depth_many`` without an explicit queue list reports only queues with a
 non-zero ready or inflight count, matching the tombstoned ``/queues/<name>``
 view (a fully drained queue disappears rather than lingering at 0/0).
+
+Per-family sharding (the cross-boundary traffic overhaul): ``BrokerRouter``
+splits the broker behind a consistent-hash ring over queue families (a family
+IS the queue name — ``scheduler.queue_for`` derives it from the capability
+set), the exact discipline the overwatch ``ShardRouter`` uses. Each shard is a
+full ``Broker`` behind its OWN fabric endpoint/service (``broker-s<k>``), so
+worker ``pull_many``/``ack_many`` batches for disjoint families stop
+serializing through one handler, and every client (scheduler, workers) derives
+identical routing from the shard count alone — no topology exchange.
+``num_shards=1`` keeps the single ``"broker"`` service and is
+behavior-identical to the unsharded broker. Both ``depth_many`` and
+``changed_depths`` accept a family filter so a publisher only reports the
+families its shard owns.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from collections import Counter, deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
+
+from repro.core.overwatch import ShardRouter
+
+
+BROKER_SERVICE = "broker"
+
+
+def broker_service_names(num_shards: int) -> Tuple[str, ...]:
+    """Service names backing the (possibly sharded) broker. One shard keeps
+    the historic ``"broker"`` name — identical AppSpec, DNS, ACLs, channels."""
+    if num_shards <= 1:
+        return (BROKER_SERVICE,)
+    return tuple(f"broker-s{i}" for i in range(num_shards))
+
+
+class BrokerRouter(ShardRouter):
+    """Deterministic queue-family -> shard routing: the overwatch's
+    consistent-hash ring (crc32, 32 vnodes/shard) under an independent seed.
+    Clients and the composer build the same ring from the shard count alone,
+    so routing is a pure function — part of the wire contract exactly like
+    the overwatch ring parameters."""
+
+    def __init__(self, num_shards: int, vnodes: int = 32):
+        super().__init__(max(1, num_shards), vnodes=vnodes,
+                         seed="broker-shard")
+
+    def shard_for_queue(self, queue: str) -> int:
+        return self.shard_for_segment(queue)
+
+    def service_for_queue(self, queue: str) -> str:
+        """The service name a client dials for this queue's ops."""
+        if self.num_shards == 1:
+            return BROKER_SERVICE
+        return f"broker-s{self.shard_for_queue(queue)}"
+
+
+FamilyFilter = Union[None, Callable[[str], bool], set, frozenset, list, tuple]
+
+
+def _family_match(families: FamilyFilter, queue: str) -> bool:
+    if families is None:
+        return True
+    if callable(families):
+        return bool(families(queue))
+    return queue in families
 
 
 class Broker:
@@ -191,11 +249,14 @@ class Broker:
                     "ready": ready, "inflight": inflight}
         if op == "depth_many":
             queues = msg.get("queues")
+            families = msg.get("families")   # per-family filter (sharding)
             listing = queues is None
             if listing:
                 queues = sorted(set(self.queues) | set(self._inflight_count))
             depths = {}
             for q in queues:
+                if not _family_match(families, q):
+                    continue
                 ready, inflight = self._depth_of(q)
                 if listing and not ready and not inflight:
                     continue            # drained queues drop out of listings
@@ -204,18 +265,29 @@ class Broker:
         return {"ok": False, "error": f"unknown op {op}"}
 
     # ------------------------------------------------------- depth publication
-    def changed_depths(self) -> Dict[str, dict]:
+    def changed_depths(self, families: FamilyFilter = None) -> Dict[str, dict]:
         """(ready, inflight) for queues whose counts moved since the last call
         — the sweep-cadence feed a publisher writes under ``/queues/<name>``.
         Queues whose dirty ops netted out to the last-published counts are
         skipped, keeping the watch stream quiet on steady state.
+
+        ``families`` (a container or predicate of queue names) restricts the
+        report to the families this shard OWNS: a sharded composer publishes
+        each family exactly once, from its owning shard. Non-owned dirty
+        queues stay dirty — an unfiltered call (or the owner) still sees
+        them, nothing is silently un-flagged.
         """
         self._expire()
         out: Dict[str, dict] = {}
+        skipped = []
         for q in sorted(self._depth_dirty):
+            if not _family_match(families, q):
+                skipped.append(q)
+                continue
             cur = self._depth_of(q)
             if self._published.get(q) != cur:
                 self._published[q] = cur
                 out[q] = {"ready": cur[0], "inflight": cur[1]}
         self._depth_dirty.clear()
+        self._depth_dirty.update(skipped)
         return out

@@ -25,6 +25,16 @@ and a removed pod loses it. ``attach_autoscaler`` wires the
 ``repro.autoscale`` reconciler into the tick loop: the published queue
 depths drive worker-pod placement and retirement with no manual sizing.
 
+``broker_shards=N`` splits the broker per queue family behind a
+``BrokerRouter`` (consistent hash over queue names, the overwatch shard
+discipline): one ``Broker`` + one service/fabric endpoint per shard, with the
+scheduler and every worker routing each queue's ops to its owning shard —
+disjoint families stop serializing through one handler. One shard keeps the
+single historic ``"broker"`` service and is behavior-identical.
+``depth_gated_workers=True`` (needs the plane's replica fan-out) lets remote
+workers consult their cluster-local ``/queues/`` replica view and skip the
+cross-boundary ``pull_many`` for queues the local snapshot shows empty.
+
 ``pipelined=True`` (default) runs the batched data plane end to end: the
 scheduler coalesces each tick's frontier into one ``upsert_many`` plus one
 ``push_many`` per queue, and workers drain ``worker_batch`` tasks per
@@ -39,7 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.plane import ManagementPlane
 from repro.core.service_graph import AppSpec, Pod, Service
 from repro.core.transport import DeliveryError
-from repro.pipelines.broker import Broker
+from repro.pipelines.broker import Broker, BrokerRouter, broker_service_names
 from repro.pipelines.dag import DAG
 from repro.pipelines.scheduler import Scheduler
 from repro.pipelines.services import ServiceClient, ServiceEndpoint
@@ -50,20 +60,27 @@ BROKER_PORT = 6379      # the paper's redis
 TASKDB_PORT = 5432      # the paper's SQL database
 
 
-def composer_appspec(master: str,
-                     workers: Dict[str, Sequence[str]]) -> AppSpec:
-    """workers: cluster -> worker pod names hosted there."""
-    pods = [Pod("scheduler-pod", needs=("broker", "taskdb")),
+def composer_appspec(master: str, workers: Dict[str, Sequence[str]],
+                     broker_shards: int = 1) -> AppSpec:
+    """workers: cluster -> worker pod names hosted there. With
+    ``broker_shards > 1`` the broker is one service PER SHARD
+    (``broker-s<k>``, consecutive ports) so each shard gets its own fabric
+    endpoint and gateway tunnels; one shard keeps the historic single
+    ``"broker"`` service — the AppSpec is byte-identical to pre-sharding."""
+    broker_svcs = broker_service_names(broker_shards)
+    needs = tuple(broker_svcs) + ("taskdb",)
+    pods = [Pod("scheduler-pod", needs=needs),
             Pod("broker-pod", needs=()),
             Pod("taskdb-pod", needs=())]
     partition = {"scheduler-pod": master, "broker-pod": master,
                  "taskdb-pod": master}
     for cluster, names in workers.items():
         for w in names:
-            pods.append(Pod(w, needs=("broker", "taskdb")))
+            pods.append(Pod(w, needs=needs))
             partition[w] = cluster
-    services = (Service("broker", BROKER_PORT, ("broker-pod",)),
-                Service("taskdb", TASKDB_PORT, ("taskdb-pod",)))
+    services = tuple(Service(s, BROKER_PORT + i, ("broker-pod",))
+                     for i, s in enumerate(broker_svcs))
+    services += (Service("taskdb", TASKDB_PORT, ("taskdb-pod",)),)
     return AppSpec(services=services, pods=tuple(pods), partition=partition)
 
 
@@ -73,28 +90,44 @@ class HybridComposer:
                  worker_queues: Optional[Dict[str, Tuple[str, ...]]] = None,
                  worker_batch: int = 16, pipelined: bool = True,
                  depth_publish_every: float = 1.0,
-                 worker_setup=None):
+                 worker_setup=None,
+                 broker_shards: int = 1,
+                 depth_gated_workers: bool = False,
+                 depth_gate_max_lag: float = 2.0):
         self.plane = plane
         self.worker_batch = worker_batch
         self.pipelined = pipelined
         # applied to every worker, static AND dynamically spawned — the hook
         # for registering custom task kinds on autoscaled pods
         self.worker_setup = worker_setup
-        self.spec = composer_appspec(plane.master, workers)
+        self.broker_shards = max(1, broker_shards)
+        self.router = BrokerRouter(self.broker_shards)
+        self._broker_services = broker_service_names(self.broker_shards)
+        # remote workers consult their cluster-local overwatch replica's
+        # /queues/ view before pulling (needs plane replica fan-out; workers
+        # on clusters without a replica keep the always-pull protocol)
+        self.depth_gated_workers = depth_gated_workers
+        self.depth_gate_max_lag = depth_gate_max_lag
+        self.spec = composer_appspec(plane.master, workers,
+                                     self.broker_shards)
         plane.upload_spec(self.spec)
 
         fabric = plane.fabric
         master_state = plane.master_agent.state
-        self.broker = Broker(clock_fn=lambda: fabric.clock)
+        self.brokers = [Broker(clock_fn=lambda: fabric.clock)
+                        for _ in range(self.broker_shards)]
+        self.broker = self.brokers[0]   # single-shard accessor (tests, back-compat)
         self.taskdb = TaskDB()
-        ServiceEndpoint(fabric, self.spec, master_state, "broker",
-                        self.broker.handle)
+        for sname, shard in zip(self._broker_services, self.brokers):
+            ServiceEndpoint(fabric, self.spec, master_state, sname,
+                            shard.handle)
         ServiceEndpoint(fabric, self.spec, master_state, "taskdb",
                         self.taskdb.handle)
 
         sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
         self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
-                                   batched=pipelined)
+                                   batched=pipelined,
+                                   broker_for=self.router.service_for_queue)
 
         self.workers: List[PipelineWorker] = []
         for cluster, names in workers.items():
@@ -109,16 +142,38 @@ class HybridComposer:
 
     def _make_worker(self, name: str, cluster: str,
                      queues: Tuple[str, ...]) -> PipelineWorker:
-        state = self.plane.agents[cluster].state
+        agent = self.plane.agents[cluster]
         fabric = self.plane.fabric
-        client = ServiceClient(fabric, state, name)
+        client = ServiceClient(fabric, agent.state, name)
         worker = PipelineWorker(
             client, name, queues=queues, clock_fn=lambda: fabric.clock,
-            batch=self.worker_batch, pipelined=self.pipelined)
+            batch=self.worker_batch, pipelined=self.pipelined,
+            broker_for=self.router.service_for_queue,
+            depth_hint=self._depth_hint_for(agent))
         if self.worker_setup is not None:
             self.worker_setup(worker)
         self.workers.append(worker)
         return worker
+
+    def _depth_hint_for(self, agent):
+        """The worker depth gate: believed ready depth off the hosting
+        cluster's local replica. None (always pull) when gating is off, the
+        worker is master-local (its pulls never cross the boundary), or the
+        cluster hosts no replica. An out-of-bound replica reports "unknown"
+        (pull) rather than a confidently wrong zero."""
+        if (not self.depth_gated_workers or agent.replica is None
+                or agent.cluster == self.plane.master):
+            return None
+        replica, fabric = agent.replica, self.plane.fabric
+        max_lag = self.depth_gate_max_lag
+
+        def hint(queue: str) -> int:
+            if replica.lag(fabric.clock) > max_lag:
+                return 1                     # unknown: fall back to pulling
+            row = replica.get(f"/queues/{queue}")
+            return int((row or {}).get("ready", 0))
+
+        return hint
 
     # ------------------------------------------------------------------- user API
     def add_dag(self, dag: DAG) -> None:
@@ -151,7 +206,8 @@ class HybridComposer:
         ONE broadcast — safe as long as the flush lands before the new
         worker's first tick, which the autoscaler guarantees by flushing at
         the end of every reconcile pass."""
-        pods = tuple(self.spec.pods) + (Pod(name, needs=("broker", "taskdb")),)
+        pods = tuple(self.spec.pods) + (
+            Pod(name, needs=tuple(self._broker_services) + ("taskdb",)),)
         partition = {**self.spec.partition, name: cluster}
         self.spec = AppSpec(services=self.spec.services, pods=pods,
                             partition=partition)
@@ -211,14 +267,21 @@ class HybridComposer:
             return
         self._depth_published_at = now
         ow = self.plane.master_agent.ow
-        for queue, depth in self.broker.changed_depths().items():
-            if not depth["ready"] and not depth["inflight"]:
-                if queue in self._published_queues:
-                    ow.delete(f"/queues/{queue}")
-                    self._published_queues.discard(queue)
-                continue
-            ow.put(f"/queues/{queue}", {**depth, "clock": now})
-            self._published_queues.add(queue)
+        for i, shard in enumerate(self.brokers):
+            # each shard reports only the families it owns (belt-and-braces:
+            # the router already steers every op to its owner), so a family
+            # is published exactly once however many shards exist
+            owned = (None if self.broker_shards == 1
+                     else (lambda q, _i=i:
+                           self.router.shard_for_queue(q) == _i))
+            for queue, depth in shard.changed_depths(families=owned).items():
+                if not depth["ready"] and not depth["inflight"]:
+                    if queue in self._published_queues:
+                        ow.delete(f"/queues/{queue}")
+                        self._published_queues.discard(queue)
+                    continue
+                ow.put(f"/queues/{queue}", {**depth, "clock": now})
+                self._published_queues.add(queue)
 
     def run_dag(self, dag_id: str, max_ticks: int = 500) -> bool:
         for _ in range(max_ticks):

@@ -43,11 +43,14 @@ def queue_for(task: Task) -> str:
 
 class Scheduler:
     def __init__(self, client: ServiceClient, clock_fn=None,
-                 batched: bool = True):
+                 batched: bool = True, broker_for=None):
         self.client = client
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.batched = batched
+        # queue -> broker service name (per-family sharding); the default is
+        # the single unsharded "broker" service
+        self.broker_for = broker_for or (lambda queue: "broker")
         self._state: Dict[str, Dict[str, dict]] = {}   # cached latest rows
         self._cursor: Dict[str, int] = {}
         self._quiescent: Set[str] = set()
@@ -225,15 +228,16 @@ class Scheduler:
             if rows:
                 self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
             for queue in sorted(pushes):
-                self.client.call("broker", {"op": "push_many", "queue": queue,
-                                            "msgs": pushes[queue]})
+                self.client.call(self.broker_for(queue),
+                                 {"op": "push_many", "queue": queue,
+                                  "msgs": pushes[queue]})
             return
         for row in rows:
             self.client.call("taskdb", {"op": "upsert", **row})
         for queue in sorted(pushes):
             for m in pushes[queue]:
-                self.client.call("broker", {"op": "push", "queue": queue,
-                                            "msg": m})
+                self.client.call(self.broker_for(queue),
+                                 {"op": "push", "queue": queue, "msg": m})
 
     # ------------------------------------------------------------------ observation
     def dag_status(self, dag_id: str) -> Dict[str, str]:

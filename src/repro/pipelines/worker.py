@@ -23,6 +23,16 @@ its broker lease expires, exactly as in the per-task protocol; the terminal
 taskdb states of both protocols are identical (``pipelined=False`` keeps the
 seed's per-task path for equivalence tests and the benchmark baseline).
 
+Cross-boundary locality (the traffic overhaul): ``broker_for`` routes each
+queue's ops to its owning broker shard's service (``BrokerRouter`` — one
+``ack_many`` per shard that leased work, still one RPC total when unsharded),
+and an optional ``depth_hint`` (the cluster-local overwatch replica's
+``/queues/<name>`` view) skips the ``pull_many`` round-trip entirely for
+queues the local snapshot shows empty — a remote worker polling idle queues
+stops paying a cross-boundary RPC per queue per tick. A stale-zero hint only
+delays the pull by the replica's staleness bound; a stale-positive hint costs
+one empty pull — both degrade to the ungated protocol.
+
 Drain protocol (the autoscaling plane): a worker being retired must hand its
 slot back WITHOUT losing or re-running any leased task. The tick is split
 into two explicit phases around an in-flight buffer —
@@ -109,7 +119,9 @@ class PipelineWorker:
                  queues: Tuple[str, ...] = ("default",), clock_fn=None,
                  batch: int = 16, pipelined: bool = True,
                  on_drained: Optional[Callable[["PipelineWorker"], None]]
-                 = None):
+                 = None,
+                 broker_for: Optional[Callable[[str], str]] = None,
+                 depth_hint: Optional[Callable[[str], int]] = None):
         self.client = client
         self.pod = pod
         self.queues = tuple(queues)
@@ -117,10 +129,20 @@ class PipelineWorker:
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.batch = max(int(batch), 1)
         self.pipelined = pipelined
+        # queue -> broker service (per-family sharding); default: the single
+        # unsharded "broker" service, exactly the pre-sharding wire protocol
+        self.broker_for = broker_for or (lambda queue: "broker")
+        # queue -> believed ready depth, served from the cluster-local
+        # overwatch replica (fan-out mode). 0 skips the pull round-trip for
+        # that queue this tick — an empty remote queue no longer costs a
+        # cross-boundary pull_many per tick. None (default): always pull.
+        self.depth_hint = depth_hint
+        self.skipped_pulls = 0
         self.executed = 0
         self.state = "running"          # running | draining | drained
         self.on_drained = on_drained
-        self._inflight: List[Tuple[dict, int]] = []   # leased, uncommitted
+        # leased, uncommitted: (msg, tag, broker service that leased it)
+        self._inflight: List[Tuple[dict, int, str]] = []
 
     def register(self, kind: str, fn: Callable[[dict], dict]) -> None:
         self.handlers[kind] = fn
@@ -152,33 +174,39 @@ class PipelineWorker:
             return 0
         pulled = 0
         for queue in self.queues:
-            resp = self.client.call("broker", {"op": "pull_many",
-                                               "queue": queue,
-                                               "max_n": self.batch})
+            if self.depth_hint is not None and not self.depth_hint(queue):
+                self.skipped_pulls += 1      # local view says empty: no RPC
+                continue
+            svc = self.broker_for(queue)
+            resp = self.client.call(svc, {"op": "pull_many",
+                                          "queue": queue,
+                                          "max_n": self.batch})
             msgs = resp.get("msgs") or []
             tags = resp.get("tags") or []
-            self._inflight.extend(zip(msgs, tags))
+            self._inflight.extend((m, t, svc) for m, t in zip(msgs, tags))
             pulled += len(msgs)
         return pulled
 
     def commit_phase(self) -> List[str]:
         """Phase 2: execute the in-flight buffer, then commit it with ONE
-        taskdb ``upsert_many`` and ONE broker ``ack_many``. Rows are durable
-        before the broker forgets the leases, so a crash between the two at
-        worst re-runs already-committed tasks (same-try upserts are
-        idempotent), never loses one."""
+        taskdb ``upsert_many`` and ONE broker ``ack_many`` per broker shard
+        that leased work this batch (exactly one with an unsharded broker).
+        Rows are durable before any broker forgets its leases, so a crash
+        between the two at worst re-runs already-committed tasks (same-try
+        upserts are idempotent), never loses one."""
         if not self._inflight:
             return []
         batch, self._inflight = self._inflight, []
         rows: List[dict] = []
-        tags: List[int] = []
+        acks: Dict[str, List[int]] = {}      # broker service -> leased tags
         executed: List[str] = []
-        for msg, tag in batch:
+        for msg, tag, svc in batch:
             rows.extend(self._run(msg))
             executed.append(f"{msg['dag']}.{msg['task']}")
-            tags.append(tag)
+            acks.setdefault(svc, []).append(tag)
         self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
-        self.client.call("broker", {"op": "ack_many", "tags": tags})
+        for svc in sorted(acks):
+            self.client.call(svc, {"op": "ack_many", "tags": acks[svc]})
         return executed
 
     # ------------------------------------------------------------------- drain
@@ -226,15 +254,16 @@ class PipelineWorker:
         """The seed's one-task path: pull, upsert(running), execute,
         upsert(terminal), ack — 4 RPCs per task."""
         for queue in self.queues:
-            resp = self.client.call("broker", {"op": "pull", "queue": queue})
+            svc = self.broker_for(queue)
+            resp = self.client.call(svc, {"op": "pull", "queue": queue})
             msg = resp.get("msg")
             if msg is None:
                 continue
-            self._execute(msg, resp.get("tag"))
+            self._execute(msg, resp.get("tag"), svc)
             return f"{msg['dag']}.{msg['task']}"
         return None
 
-    def _execute(self, msg: dict, tag) -> None:
+    def _execute(self, msg: dict, tag, svc: str = "broker") -> None:
         key = {"dag": msg["dag"], "task": msg["task"], "try": msg["try"]}
         self.client.call("taskdb", {"op": "upsert", **key, "status": "running",
                                     "worker": self.pod,
@@ -256,4 +285,4 @@ class PipelineWorker:
             traceback.print_exc()
         finally:
             self.executed += 1
-            self.client.call("broker", {"op": "ack", "tag": tag})
+            self.client.call(svc, {"op": "ack", "tag": tag})

@@ -1,0 +1,283 @@
+"""Cross-boundary traffic overhaul: replica fan-out fault paths, byte-ledger
+truth, the worker depth gate, and the fabric send fast-path satellites
+(memoized ACL exemptions, incremental byte-cache eviction, message-log skip).
+"""
+import pytest
+
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.core.replica import REPLICA_PREFIXES, LocalReplica
+from repro.core.transport import (
+    _CACHE_LIMIT, _STR_BYTES_CACHE, AclTable, DeliveryError, Fabric,
+    _payload_bytes, _str_bytes)
+from repro.pipelines.composer import HybridComposer
+from repro.pipelines.dag import DAG, Task
+
+
+def _fanout_plane(n=2, coalesce=True):
+    plane = ManagementPlane(coalesce_watches=coalesce, replica_fanout=True)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    for i in range(n):
+        plane.add_cluster(f"c{i}")
+    plane.tick(n=2)                      # settle; first ships land
+    return plane
+
+
+# ------------------------------------------------------------ local reads
+def test_replica_local_read_costs_zero_cross_bytes():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    before = plane.fabric.cross_cluster_bytes()
+    tele = agent.fleet_telemetry(max_lag=2.0)
+    assert set(tele) == {"master", "c0", "c1"}
+    # served from the local snapshot: not one byte crossed the boundary
+    assert plane.fabric.cross_cluster_bytes() == before
+    # the same read without a replica is a full round trip
+    plain = ManagementPlane(coalesce_watches=True)
+    plain.add_cluster("master", is_master=True)
+    plain.add_cluster("c0")
+    plain.tick(n=2)
+    assert plain.shipper is None and plain.agents["c0"].replica is None
+    b0 = plain.fabric.cross_cluster_bytes()
+    plain.agents["c0"].fleet_telemetry(max_lag=2.0)
+    assert plain.fabric.cross_cluster_bytes() > b0
+
+
+def test_byte_ledger_reflects_ships_not_reads():
+    """Satellite: cross_bytes under fan-out is the shipped batches, however
+    many reads each cluster issues."""
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    ships_before = dict(plane.shipper.stats)
+    cross_before = plane.fabric.cross_cluster_bytes()
+    for _ in range(50):
+        agent.fleet_telemetry(max_lag=5.0)
+        agent.queue_depths(max_lag=5.0)
+    assert plane.fabric.cross_cluster_bytes() == cross_before   # reads: free
+    plane.tick()                        # the sweep ships one envelope/cluster
+    shipped = (plane.shipper.stats["shipped_bytes"]
+               - ships_before.get("shipped_bytes", 0))
+    grown = plane.fabric.cross_cluster_bytes() - cross_before
+    assert shipped > 0
+    # everything the read path added to the ledger is ship traffic (the rest
+    # of the growth is heartbeat/lease chatter, which exists in both modes)
+    assert grown >= shipped
+
+
+def test_fanout_works_with_synchronous_watches_too():
+    """The shipper buffers per-event callbacks the same way it buffers
+    coalesced batches — fan-out is delivery-mode independent."""
+    plane = _fanout_plane(coalesce=False)
+    agent = plane.agents["c0"]
+    plane.overwatch.handle({"op": "put", "key": "/queues/sync-q",
+                            "value": {"ready": 3, "inflight": 0}})
+    plane.tick()
+    before = plane.fabric.cross_cluster_bytes()
+    assert agent.queue_depths(max_lag=2.0)["sync-q"]["ready"] == 3
+    assert plane.fabric.cross_cluster_bytes() == before
+
+
+def test_replica_covers_only_shipped_prefixes():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    rep = agent.replica
+    assert rep.covers("/telemetry/") and rep.covers("/queues/q1")
+    assert not rep.covers("/jobs/") and not rep.covers("/tele")
+    # an uncovered prefix falls through to the primary round-trip
+    before = plane.fabric.cross_cluster_bytes()
+    agent.ow.range_stale("/jobs/", max_lag=100.0)
+    assert plane.fabric.cross_cluster_bytes() > before
+
+
+# ------------------------------------------------------------- fault paths
+def test_channel_death_stale_within_bound_then_primary_fallback():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    # kill the master->c0 dispatch relay the ships ride
+    relay = plane.dispatcher._relays[("dispatch-relay", "c0")]
+    ch = plane.fabric.channel_at("master", relay)
+    plane.fabric.kill_channel(ch.channel_id)
+    # a new value lands on the primary; ships can no longer deliver it
+    plane.overwatch.handle({"op": "put", "key": "/queues/hot",
+                            "value": {"ready": 7, "inflight": 0}})
+    fails_before = plane.shipper.stats["ship_failures"]
+    plane.tick()
+    assert plane.shipper.stats["ship_failures"] > fails_before
+    # within bound: the replica serves the (stale) pre-death snapshot locally
+    assert "hot" not in agent.queue_depths(max_lag=5.0)
+    # past bound: transparent fallback to the primary — never silently staler
+    plane.tick(n=6)
+    depths = agent.queue_depths(max_lag=2.0)
+    assert depths["hot"]["ready"] == 7
+    # heal: the next ship carries the missed delta, reads go local again
+    plane.fabric.revive_channel(ch.channel_id)
+    plane.tick()
+    assert agent.replica.get("/queues/hot")["ready"] == 7
+    cross = plane.fabric.cross_cluster_bytes()
+    assert agent.queue_depths(max_lag=2.0)["hot"]["ready"] == 7
+    assert plane.fabric.cross_cluster_bytes() == cross
+
+
+def test_partition_heal_resumes_from_cumulative_ack():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    rev_before = agent.replica.applied_rev
+    plane.fabric.partition_cluster("c0")
+    # several sweeps' worth of deltas accumulate while the cluster is dark
+    # (heal before the lease TTL so the cluster is never tombstoned)
+    for k in range(3):
+        plane.overwatch.handle({"op": "put", "key": f"/queues/q{k}",
+                                "value": {"ready": k + 1, "inflight": 0}})
+        if k:
+            plane.tick()
+    assert agent.replica.applied_rev == rev_before      # nothing landed
+    plane.fabric.heal_cluster("c0")
+    plane.tick()
+    # ONE ship after heal converges the replica on everything it missed
+    for k in range(3):
+        assert agent.replica.get(f"/queues/q{k}") == {"ready": k + 1,
+                                                      "inflight": 0}
+    assert agent.replica.applied_rev >= rev_before + 3
+    primary = plane.overwatch.handle(
+        {"op": "range", "prefix": "/queues/"})["items"]
+    local = agent.ow.range_stale("/queues/", max_lag=2.0)
+    assert local == primary
+
+
+def test_cluster_death_unregisters_feed():
+    plane = _fanout_plane()
+    assert "c0" in plane.shipper._feeds
+    plane.fabric.partition_cluster("c0")
+    plane.tick(n=8)                      # lease expires, tombstone lands
+    assert "c0" not in plane.dispatcher.clusters()
+    assert "c0" not in plane.shipper._feeds
+    assert "c1" in plane.shipper._feeds  # survivors keep their feed
+
+
+def test_ship_never_advances_horizon_past_pending_events():
+    """Regression: shipping while coalesced watch events are still pending
+    must not stamp an ack horizon beyond them — ship_all takes the watch
+    barrier, and the horizon only moves to ingested revisions, so the put
+    below can never be skipped by later ships."""
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    plane.overwatch.handle({"op": "put", "key": "/queues/hot",
+                            "value": {"ready": 9, "inflight": 0}})
+    # no sweep between the put and this direct ship: the event sits in the
+    # coalesced queue until ship_all's own barrier delivers it
+    plane.shipper.ship_all()
+    assert agent.replica.get("/queues/hot") == {"ready": 9, "inflight": 0}
+    plane.tick(n=2)
+    assert agent.queue_depths(max_lag=2.0)["hot"]["ready"] == 9
+
+
+def test_replica_never_synced_has_infinite_lag():
+    rep = LocalReplica(REPLICA_PREFIXES)
+    assert rep.lag(0.0) == float("inf")
+    rep.apply_ship({"events": [("put", "/queues/a", {"ready": 1}, 5)],
+                    "rev": 5, "clock": 3.0})
+    assert rep.lag(3.0) == 0.0 and rep.applied_rev == 5
+    # idempotent cumulative redelivery converges without deduplication
+    rep.apply_ship({"events": [("put", "/queues/a", {"ready": 1}, 5),
+                               ("delete", "/queues/a", None, 6)],
+                    "rev": 6, "clock": 4.0})
+    assert rep.get("/queues/a") is None and rep.applied_rev == 6
+
+
+# ---------------------------------------------------------- worker depth gate
+def test_depth_gated_worker_skips_empty_pulls_and_completes():
+    plane = ManagementPlane(coalesce_watches=True, replica_fanout=True)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem", local_plane=SimLocalPlane(caps=("cpu",)))
+    comp = HybridComposer(plane, {"onprem": ["w0"]},
+                          worker_queues={"w0": ("default", "idle-q")},
+                          depth_gated_workers=True)
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python") for i in range(5)]))
+    assert comp.run_dag("d", max_ticks=60)
+    w = comp.workers[0]
+    assert w.executed == 5
+    # the never-populated queue (and pre-publication ticks) cost no pulls
+    assert w.skipped_pulls > 0
+    # master-local workers never gate (their pulls never cross the boundary)
+    assert comp._depth_hint_for(plane.agents["master"]) is None
+
+
+def test_locality_bench_reduction_clears_bar_at_small_scale():
+    """The benchmark's own gate, pinned at the cheap 8-cluster point: byte
+    counts are deterministic, so this is a real assertion, not a flake."""
+    from benchmarks.control_plane import bench_locality_point
+    baseline = bench_locality_point(8, fanout=False, ticks=4)
+    fanout = bench_locality_point(8, fanout=True, ticks=4)
+    assert baseline["reads"] == fanout["reads"] > 0
+    reduction = (baseline["cross_bytes_per_read"]
+                 / fanout["cross_bytes_per_read"])
+    assert reduction >= 5.0
+
+
+# ------------------------------------------------------- fabric fast path
+def test_acl_exempt_prefix_scans_once_per_source():
+    acl = AclTable()
+    acl.allow("pod-a", ("ip", 1))
+    scans0 = acl.stats["prefix_scans"]
+    for _ in range(20):
+        assert acl.allowed("pod-a", ("ip", 1))
+        assert acl.allowed("gw@c1", ("ip", 9))      # exempt infra id
+        assert not acl.allowed("intruder", ("ip", 1))
+    # one scan per distinct source id, however many sends
+    assert acl.stats["prefix_scans"] - scans0 == 2  # gw@c1 + intruder
+    # behavior unchanged by memoization: default-deny still bites after
+    # block_all, exemption still wins for infra ids
+    acl.block_all(("ip", 1))
+    assert not acl.allowed("pod-a", ("ip", 1))
+    assert acl.allowed("agent@x", ("ip", 1))
+    assert acl.allowed("system@dispatcher", ("ip", 1))
+
+
+def test_byte_caches_evict_incrementally():
+    _STR_BYTES_CACHE.clear()
+    _str_bytes("hot-entry")
+    # push the cache past its limit with one-shot strings
+    for i in range(_CACHE_LIMIT + 10):
+        _str_bytes(f"cold-{i}")
+    # never wiped: the cache sits AT the limit, not at 1 post-clear()
+    assert len(_STR_BYTES_CACHE) == _CACHE_LIMIT
+    assert _str_bytes("x" * 33) == 33               # still correct
+    _STR_BYTES_CACHE.clear()                        # leave no test residue
+
+
+def test_message_log_limit_zero_skips_append():
+    fabric = Fabric(message_log_limit=0)
+    fabric.register_handler("c", ("ip", 1), lambda p: {"ok": True})
+    for _ in range(5):
+        assert fabric.send("c", "pod", "c", ("ip", 1), {"x": 1})["ok"]
+    assert len(fabric.message_log) == 0
+    assert fabric.message_log.total_appended == 0   # never even constructed
+    # request byte accounting is unaffected by the skip (local round trips
+    # charge the request only; responses are sized on channel paths)
+    assert fabric.local_bytes["c"] == 5 * _payload_bytes({"x": 1})
+
+
+def test_response_bytes_cross_the_boundary_too():
+    """A fat response to a thin request is cross-boundary traffic — the
+    asymmetry the locality benchmark's bytes/read baseline measures."""
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("c0")
+    for i in range(50):
+        plane.overwatch.handle({"op": "put", "key": f"/telemetry/f{i}",
+                                "value": {"load": float(i)}})
+    req_bytes = _payload_bytes({"op": "range", "prefix": "/telemetry/"})
+    before = plane.fabric.cross_cluster_bytes()
+    items = plane.agents["c0"].ow.range("/telemetry/")
+    assert len(items) == 50
+    # the 50-row response dwarfs the request on the ledger
+    assert plane.fabric.cross_cluster_bytes() - before > 3 * req_bytes
+
+
+def test_partitioned_send_still_raises():
+    fabric = Fabric()
+    fabric.register_handler("c", ("ip", 1), lambda p: {"ok": True})
+    fabric.partition_cluster("c")
+    with pytest.raises(DeliveryError):
+        fabric.send("c", "pod", "c", ("ip", 1), {"x": 1})

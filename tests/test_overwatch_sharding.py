@@ -465,6 +465,8 @@ def test_envelope_rides_the_fabric_once_sized():
     env = Envelope({"op": "noop", "data": [1, 2, 3]})
     fabric.send("c", "pod", "c", ("ip", 1), env)
     n = fabric.local_bytes["c"]
+    # purely-local round trip: the request is charged (sized once via the
+    # Envelope cache), the response is never even walked
     assert n == _payload_bytes(dict(env))
     fabric.send("c", "pod", "c", ("ip", 1), env)
     assert fabric.local_bytes["c"] == 2 * n
