@@ -6,13 +6,18 @@
 
 PYTHONPATH := src
 
-.PHONY: test bench bench-all bench-check bench-check-ci
+.PHONY: test bench bench-all bench-check bench-check-ci chaos
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale durability
+
+# Full 50k-task chaos matrix (scripted master crashes, exactly-once
+# verdicts) — the human-readable face of the durability suite
+chaos:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.durability --chaos
 
 bench-all:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json
@@ -26,5 +31,8 @@ bench-check:
 # gate on shared CI runners, but its locality block (cross-boundary bytes
 # per remote read, replica fan-out on/off) is deterministic and gated here
 # via the suite:part spec.
+# durability:recovery re-runs the chaos matrix at a CI-sized task count and
+# gates hard zeros (lost/double-run tasks) plus the deterministic replay-
+# amplification ratio — record counts, host-independent
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality durability:recovery

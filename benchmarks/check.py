@@ -31,7 +31,7 @@ import sys
 import traceback
 from typing import Dict, List, Tuple
 
-GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale")
+GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability")
 TOLERANCE = 1.2          # a gated number may move 20% the wrong way
 
 

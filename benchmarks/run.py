@@ -21,7 +21,7 @@ import os
 import sys
 import traceback
 
-SUITES = ("control_plane", "pipeline_plane", "autoscale",
+SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability",
           "collective_locality", "roofline_bench", "kernels_bench",
           "train_throughput")
 

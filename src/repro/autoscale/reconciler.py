@@ -306,6 +306,55 @@ class Reconciler:
             self.events.append((now, rec.family, "lost",
                                 rec.name, rec.cluster))
 
+    # ---------------------------------------------------------- crash adoption
+    def adopt(self, workers) -> int:
+        """Rebuild the pod table after a master crash: overwatch placements
+        (recovered from the WAL) are the only surviving truth about which
+        worker-pod jobs existed, and the composer's surviving
+        ``PipelineWorker`` objects are the pods themselves. Match them by pod
+        name (``wp-<family>-<seq>``), resume the sequence counter past the
+        highest adopted seq (never reuse a live pod's name), finish any drain
+        the crash interrupted, and retire orphan placements whose worker is
+        gone. Returns the number of pods adopted as running."""
+        now = self.plane.fabric.clock
+        by_pod = {w.pod: w for w in workers}
+        adopted = 0
+        max_seq = 0
+        for jid, placement in sorted(self.dispatcher.placements().items()):
+            job = placement.get("job", {})
+            if job.get("kind") != "worker-pod":
+                continue
+            family = job.get("tags", {}).get("family")
+            if family not in self.pods:
+                continue
+            try:
+                seq = int(jid.rsplit("-", 1)[1])
+            except (IndexError, ValueError):
+                continue
+            max_seq = max(max_seq, seq)
+            worker = by_pod.get(jid)
+            if worker is None or worker.state == "drained":
+                # the pod is gone (or finished draining mid-crash, before its
+                # retirement landed): tombstone the job records
+                self.dispatcher.retire(jid)
+                if worker is not None:
+                    self.composer.remove_worker(worker, broadcast=False)
+                continue
+            rec = PodRecord(name=jid, family=family,
+                            cluster=placement["cluster"], job_id=jid,
+                            worker=worker, seq=seq)
+            self.pods[family][jid] = rec
+            if worker.state == "draining":
+                # the recovery barrier already retried its pending commit;
+                # re-arm the drain closure (the crash cleared it) and finish
+                self._drain(rec, now)
+            else:
+                adopted += 1
+                self.events.append((now, family, "adopted", jid,
+                                    rec.cluster))
+        self._seq = itertools.count(max_seq + 1)
+        return adopted
+
     # ------------------------------------------------------------ observability
     def _publish(self, family: str, policy: ScalingPolicy, desired: int,
                  backlog: float, blocked: Optional[str], now: float) -> None:

@@ -85,9 +85,21 @@ class CheckpointManager:
                 f.flush()
                 os.fsync(f.fileno())
             os.rename(mpath + ".tmp", mpath)           # manifest last = commit point
+            # swap the finished tree in WITHOUT a window where no committed
+            # checkpoint exists at this step: rename the old tree aside, then
+            # the atomic tmp->target rename, then drop the old one. A crash
+            # anywhere in the sequence leaves at least one complete,
+            # manifest-bearing tree on disk (the .old survivor is ignored by
+            # all_steps and reaped by the next save of this step).
             if os.path.exists(target):
-                shutil.rmtree(target)
-            os.rename(tmp, target)
+                old = target + ".old"
+                if os.path.exists(old):
+                    shutil.rmtree(old)
+                os.rename(target, old)
+                os.rename(tmp, target)
+                shutil.rmtree(old, ignore_errors=True)
+            else:
+                os.rename(tmp, target)
             self._gc()
             for hook in self._commit_hooks:
                 hook(step, os.path.join(target, "manifest.json"))
@@ -114,10 +126,15 @@ class CheckpointManager:
     def all_steps(self) -> List[int]:
         out = []
         for d in sorted(os.listdir(self.directory)):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.directory, d,
-                                               "manifest.json")):
-                    out.append(int(d[5:]))
+            if not d.startswith("step_"):
+                continue
+            try:
+                step = int(d[5:])       # skips .tmp / .old crash leftovers
+            except ValueError:
+                continue
+            if os.path.exists(os.path.join(self.directory, d,
+                                           "manifest.json")):
+                out.append(step)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -134,10 +151,38 @@ class CheckpointManager:
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {self.directory}")
         target = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(target, "manifest.json")) as f:
+        mpath = os.path.join(target, "manifest.json")
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"checkpoint step {step} has no committed manifest "
+                f"(crash left an uncommitted tree?): {mpath}")
+        with open(mpath) as f:
             manifest = json.load(f)
-
+        # staleness/integrity validation BEFORE any bytes are materialized: a
+        # manifest that disagrees with its directory name, a missing leaf
+        # file, or a truncated one (torn write around the commit point) must
+        # fail loudly here — not as a reshape error (or worse, silently wrong
+        # params) deep inside restore
+        if manifest.get("step") != step:
+            raise ValueError(
+                f"stale checkpoint: directory says step {step} but manifest "
+                f"says step {manifest.get('step')}")
         names, leaves, treedef = _flatten_with_names(like)
+        for name in names:
+            ent = manifest["leaves"].get(name)
+            if ent is None:
+                raise KeyError(f"checkpoint step {step} has no leaf {name!r}")
+            path = os.path.join(target, ent["file"])
+            if not os.path.exists(path):
+                raise FileNotFoundError(
+                    f"checkpoint step {step}: leaf file missing: {path}")
+            want = (int(np.prod(ent["shape"])) if ent["shape"] else 1) \
+                * jnp.dtype(ent["dtype"]).itemsize
+            got = os.path.getsize(path)
+            if got != want:
+                raise ValueError(
+                    f"checkpoint step {step}: leaf {name!r} is {got} bytes, "
+                    f"expected {want} ({ent['shape']} {ent['dtype']})")
         shard_leaves = (jax.tree_util.tree_leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
         out = []

@@ -173,6 +173,12 @@ class ControlAgent:
                 return {"ok": False, "error": "no replica hosted here"}
             applied = self.replica.apply_ship(msg["batch"])
             return {"ok": True, "applied_rev": applied}
+        if kind == "replica_rev":
+            # the recovering master's resume probe: how far this cluster's
+            # replica had applied before the crash, so the rebuilt shipper can
+            # resume the feed from that horizon instead of re-seeding
+            rev = self.replica.applied_rev if self.replica is not None else 0
+            return {"ok": True, "rev": rev}
         return {"ok": False, "error": f"unknown message {kind}"}
 
     def accept_job(self, job: dict) -> dict:

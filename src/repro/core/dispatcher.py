@@ -286,6 +286,13 @@ class Dispatcher:
         self.ow.flush_watches()
         return self._placement.get(job_id)
 
+    def placements(self) -> Dict[str, dict]:
+        """Every live placement record (job_id -> record) — the recovered
+        autoscaler's adoption view: placements are the only surviving truth
+        about which worker-pod jobs existed before a master crash."""
+        self.ow.flush_watches()
+        return dict(self._placement)
+
     def _agent_addr(self, cluster: str):
         return tuple(self._clusters[cluster]["agent_addr"])
 
@@ -329,12 +336,16 @@ class Dispatcher:
                                 msg)
 
     def _master_relay(self, cluster: str, idx: int, agent_addr) -> tuple:
-        """Lazily create the master->agent dispatch channel (initialization)."""
+        """Lazily create the master->agent dispatch channel (initialization).
+        A channel already terminating at the relay address is reused — a
+        dispatcher rebuilt by crash recovery rides its predecessor's tunnels
+        instead of stacking duplicates."""
         key = ("dispatch-relay", cluster)
         if key not in self._relays:
             local = (f"10.200.0.{idx}", 6100)
-            self.fabric.create_channel(self.master, local, cluster,
-                                       agent_addr)
+            if self.fabric.channel_at(self.master, local) is None:
+                self.fabric.create_channel(self.master, local, cluster,
+                                           agent_addr)
             self._relays[key] = local
         return self._relays[key]
 

@@ -327,6 +327,9 @@ class OverwatchShard:
             del self._kv[key]
             self._index_discard(key)
             rev = self.host._bump("expire", key)
+            if self.host._dur is not None:
+                self.host._dur.append(self.host._shard_names[self.shard_id],
+                                      ("del", key, rev))
             self.emit("delete", key, None, rev)
 
     # --------------------------------------------------------------------- ops
@@ -346,6 +349,9 @@ class OverwatchShard:
         self._kv[key] = (value, rev)
         if lease is not None:
             lease.keys.add(key)
+        if self.host._dur is not None:
+            self.host._dur.append(self.host._shard_names[self.shard_id],
+                                  ("put", key, value, rev, req.get("lease")))
         self.emit("put", key, value, rev)
         return {"ok": True, "revision": rev}
 
@@ -361,6 +367,9 @@ class OverwatchShard:
             del self._kv[key]
             self._index_discard(key)
             rev = self.host._bump("delete", key)
+            if self.host._dur is not None:
+                self.host._dur.append(self.host._shard_names[self.shard_id],
+                                      ("del", key, rev))
             self.emit("delete", key, None, rev)
             return {"ok": True, "revision": rev}
         return {"ok": True, "revision": None}
@@ -376,6 +385,9 @@ class OverwatchShard:
         if key not in self._kv:
             self._index_add(key)
         self._kv[key] = (req["value"], rev)
+        if self.host._dur is not None:
+            self.host._dur.append(self.host._shard_names[self.shard_id],
+                                  ("put", key, req["value"], rev, None))
         self.emit("put", key, req["value"], rev)
         return {"ok": True, "swapped": True, "revision": rev}
 
@@ -459,7 +471,8 @@ class OverwatchService:
                  addr: Address = (OVERWATCH_IP, OVERWATCH_PORT),
                  op_log_limit: Optional[int] = None,
                  num_shards: int = 1,
-                 coalesce_watches: bool = False):
+                 coalesce_watches: bool = False,
+                 durability=None, snapshot_every: int = 4096):
         self.fabric = fabric
         self.cluster = cluster
         self.addr = addr
@@ -468,9 +481,21 @@ class OverwatchService:
         self.op_log: RingLog = RingLog(op_log_limit)
         self.op_counts: Counter = Counter()  # every handled op, reads included
         self._leases: Dict[int, Lease] = {}
-        self._lease_ids = itertools.count(1)
+        self._lease_n = 0                    # last granted lease id
         self._expiry_heap: List[Tuple[float, int]] = []
         self._sweeping = False
+        # durability (repro.core.durability.LogStore): one WAL shard per kv
+        # shard (kv mutations, rev-stamped) plus a meta shard (lease table,
+        # lease-id clock). Group commit rides sweep(); snapshot+truncate when
+        # a shard's log passes snapshot_every records. None => byte-identical
+        # to the in-memory-only store.
+        self._dur = durability
+        self.snapshot_every = snapshot_every
+        self._shard_names = [f"ow-shard-{i}" for i in range(max(1, num_shards))]
+        self._meta_name = "ow-meta"
+        self.recovery_tail: List[tuple] = []   # replayed events, rev-ordered
+        self.recovery_base_rev = 0             # max shard-snapshot rev
+        self.recovery_stats: Dict[str, Any] = {}
         # watch registrations: seq preserves global callback ordering across
         # shards and buckets; per-shard buckets bound how many registrations a
         # mutation consults
@@ -488,6 +513,10 @@ class OverwatchService:
             fabric.register_handler(
                 cluster, (addr[0], addr[1] + 1 + i),
                 lambda req, _i=i: self._dispatch(req, self.shards[_i]))
+        if self._dur is not None and (
+                self._dur.has_data(self._meta_name)
+                or any(self._dur.has_data(n) for n in self._shard_names)):
+            self.recover()
 
     # ----------------------------------------------------------------- plumbing
     def handle(self, req: dict) -> dict:
@@ -546,17 +575,22 @@ class OverwatchService:
                 if lease is None or lease.expires_at != expires_at:
                     continue                 # stale entry (keepalive or gone)
                 del self._leases[lid]
+                if self._dur is not None:
+                    self._dur.append(self._meta_name, ("lx", lid))
                 for key in sorted(lease.keys):
                     self.shards[self.router.shard_for_key(key)].expire_key(key)
         finally:
             self._sweeping = False
 
     def _op_lease_grant(self, req: dict) -> dict:
-        lid = next(self._lease_ids)
+        self._lease_n += 1
+        lid = self._lease_n
         ttl = float(req["ttl"])
         expires = self.fabric.clock + ttl
         self._leases[lid] = Lease(lid, ttl, expires, set())
         heapq.heappush(self._expiry_heap, (expires, lid))
+        if self._dur is not None:
+            self._dur.append(self._meta_name, ("lg", lid, ttl, expires))
         return {"ok": True, "lease": lid}
 
     def _op_lease_keepalive(self, req: dict) -> dict:
@@ -565,6 +599,9 @@ class OverwatchService:
             return {"ok": False, "error": "lease expired or unknown"}
         lease.expires_at = self.fabric.clock + lease.ttl
         heapq.heappush(self._expiry_heap, (lease.expires_at, lease.lease_id))
+        if self._dur is not None:
+            self._dur.append(self._meta_name,
+                             ("lk", lease.lease_id, lease.expires_at))
         return {"ok": True}
 
     # ----------------------------------------------------- topology / replica ops
@@ -704,6 +741,125 @@ class OverwatchService:
     def sweep(self) -> None:
         self._sweep_leases()
         self.flush_watches()
+        if self._dur is not None:
+            self._commit_durability()
+
+    # ------------------------------------------------------------- durability
+    def _commit_durability(self) -> None:
+        """Group commit (once per sweep) + snapshot/truncate compaction when a
+        shard's replay tail passes ``snapshot_every`` records."""
+        dur = self._dur
+        for i, name in enumerate(self._shard_names):
+            dur.commit(name)
+            if dur.records_since_snapshot(name) >= self.snapshot_every:
+                dur.snapshot(name, self._shard_snapshot(i))
+        dur.commit(self._meta_name)
+        if dur.records_since_snapshot(self._meta_name) >= self.snapshot_every:
+            dur.snapshot(self._meta_name, self._meta_snapshot())
+
+    def _shard_snapshot(self, i: int) -> dict:
+        """Full shard state: kv with revs, plus this shard's slice of the
+        lease->key attachments (kept here, not in the meta snapshot, so a
+        fresher shard snapshot never loses attachments recorded only in kv
+        records the truncation just dropped)."""
+        shard = self.shards[i]
+        lease_of = {}
+        for lid, lease in self._leases.items():
+            for k in lease.keys:
+                if k in shard._kv:
+                    lease_of[k] = lid
+        return {"rev": self._rev,
+                "kv": {k: [v, rev] for k, (v, rev) in shard._kv.items()},
+                "lease_of": lease_of}
+
+    def _meta_snapshot(self) -> dict:
+        return {"rev": self._rev, "next_lease": self._lease_n,
+                "leases": {str(lid): [l.ttl, l.expires_at]
+                           for lid, l in self._leases.items()}}
+
+    def recover(self) -> None:
+        """Rebuild kv, key indexes, lease table, and the revision clock as
+        snapshot + WAL replay. LSN filtering in the LogStore guarantees replay
+        starts exactly after each shard's snapshot. Recovered leases get a
+        grace extension to ``now + ttl`` so surviving agents (whose heartbeat
+        timers never stopped) can keep alive before any expiry sweep runs.
+        ``recovery_tail`` keeps the replayed events in revision order — the
+        replica shipper's resume feed for clusters whose cumulative-ack
+        horizon is at or above ``recovery_base_rev``."""
+        dur = self._dur
+        replayed = 0
+        snapshots = 0
+        max_rev = 0
+        lease_n = 0
+        leases: Dict[int, Lease] = {}
+        meta_p, meta_recs = dur.load(self._meta_name)
+        if meta_p:
+            snapshots += 1
+            max_rev = meta_p["rev"]
+            lease_n = meta_p["next_lease"]
+            for lid, (ttl, exp) in meta_p["leases"].items():
+                lid = int(lid)
+                leases[lid] = Lease(lid, ttl, exp, set())
+        for rec in meta_recs:
+            replayed += 1
+            tag = rec[0]
+            if tag == "lg":
+                lid = rec[1]
+                leases[lid] = Lease(lid, rec[2], rec[3], set())
+                lease_n = max(lease_n, lid)
+            elif tag == "lk":
+                lease = leases.get(rec[1])
+                if lease is not None:
+                    lease.expires_at = rec[2]
+            elif tag == "lx":
+                leases.pop(rec[1], None)
+        tail: List[tuple] = []
+        base_rev = 0
+        for i, name in enumerate(self._shard_names):
+            shard = self.shards[i]
+            payload, recs = dur.load(name)
+            if payload:
+                snapshots += 1
+                base_rev = max(base_rev, payload["rev"])
+                max_rev = max(max_rev, payload["rev"])
+                for k, ent in payload["kv"].items():
+                    shard._kv[k] = (ent[0], ent[1])
+                for k, lid in payload["lease_of"].items():
+                    lease = leases.get(int(lid))
+                    if lease is not None:
+                        lease.keys.add(k)
+            for rec in recs:
+                replayed += 1
+                if rec[0] == "put":
+                    _, key, value, rev, lid = rec
+                    shard._kv[key] = (value, rev)
+                    if lid is not None:
+                        lease = leases.get(lid)
+                        if lease is not None:
+                            lease.keys.add(key)
+                    tail.append(("put", key, value, rev))
+                    max_rev = max(max_rev, rev)
+                elif rec[0] == "del":
+                    _, key, rev = rec
+                    shard._kv.pop(key, None)
+                    tail.append(("delete", key, None, rev))
+                    max_rev = max(max_rev, rev)
+            shard._keys = sorted(shard._kv)
+            shard._added.clear()
+            shard._removed.clear()
+        self._rev = max(self._rev, max_rev)
+        self._lease_n = max(self._lease_n, lease_n)
+        now = self.fabric.clock
+        for lease in leases.values():
+            lease.expires_at = max(lease.expires_at, now + lease.ttl)
+            heapq.heappush(self._expiry_heap, (lease.expires_at,
+                                               lease.lease_id))
+        self._leases = leases
+        tail.sort(key=lambda ev: ev[3])
+        self.recovery_tail = tail
+        self.recovery_base_rev = base_rev
+        self.recovery_stats = {"replayed": replayed, "snapshots": snapshots,
+                               "leases": len(leases), "rev": self._rev}
 
 
 class OverwatchClient:

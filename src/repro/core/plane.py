@@ -62,16 +62,25 @@ class ManagementPlane:
                  ow_shards: int = 1,
                  coalesce_watches: bool = False,
                  replica_fanout: bool = False,
-                 replica_prefixes=None):
+                 replica_prefixes=None,
+                 durability=None):
         self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
         self._idx = itertools.count(1)
         self.agents: Dict[str, ControlAgent] = {}
         self.ow_shards = max(1, ow_shards)
+        # durability (repro.core.durability.LogStore): WAL + snapshots for the
+        # global-plane services; None => byte-identical in-memory-only plane.
+        # Kept public: the chaos harness reaches it to model commit-loss.
+        self.durability = durability
+        self._op_log_limit = op_log_limit
+        self._coalesce_watches = coalesce_watches
+        self._replica_fanout = replica_fanout
         self.overwatch = OverwatchService(self.fabric, master,
                                           op_log_limit=op_log_limit,
                                           num_shards=self.ow_shards,
-                                          coalesce_watches=coalesce_watches)
+                                          coalesce_watches=coalesce_watches,
+                                          durability=durability)
         self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
         # replica fan-out (off by default — behavior-identical without it):
         # every non-master cluster hosts a LocalReplica fed by one coalesced
@@ -163,6 +172,73 @@ class ManagementPlane:
 
     def add_routing_rule(self, rule: RoutingRule) -> None:
         self.dispatcher.add_rule(rule)
+
+    # --------------------------------------------------------------- crash recovery
+    def recover_global_plane(self) -> dict:
+        """Rebuild the crashed global-plane services in place (the master
+        process restarting on the same addresses): a fresh ``OverwatchService``
+        whose constructor replays snapshot + WAL, a fresh ``Dispatcher`` whose
+        constructor re-seeds its materialized views from the recovered store,
+        and (fan-out mode) a fresh ``ReplicaShipper`` that resumes each
+        surviving cluster's feed from its replica's cumulative-ack horizon —
+        full reseed (with a reset marker) only when the horizon predates the
+        oldest replayable event. Control agents, workers, and the fabric
+        survive a master crash and are never touched; ``register_handler``
+        overwrites, so the rebuilt services answer on the exact addresses the
+        survivors already talk to. Returns the overwatch recovery stats."""
+        self.fabric.heal_cluster(self.master)
+        self.overwatch = OverwatchService(self.fabric, self.master,
+                                          op_log_limit=self._op_log_limit,
+                                          num_shards=self.ow_shards,
+                                          coalesce_watches=self._coalesce_watches,
+                                          durability=self.durability)
+        self.dispatcher = Dispatcher(self.fabric, self.master, self.overwatch)
+        self.shipper = None
+        if self._replica_fanout:
+            from repro.core.replica import ReplicaShipper
+            from repro.core.transport import DeliveryError
+            self.shipper = ReplicaShipper(self.overwatch,
+                                          self.dispatcher.send_agent,
+                                          prefixes=self._replica_prefixes)
+            self.dispatcher.on_cluster_down(self.shipper.unregister)
+            tail = self.overwatch.recovery_tail
+            tail_base = self.overwatch.recovery_base_rev
+            for name in sorted(self.agents):
+                agent = self.agents[name]
+                if name == self.master or agent.replica is None:
+                    continue
+                try:
+                    resp = self.dispatcher.send_agent(
+                        name, {"kind": "replica_rev"})
+                    applied = int(resp.get("rev", 0))
+                except (DeliveryError, KeyError):
+                    # unreachable (partitioned) or not yet re-registered:
+                    # bootstrap-seed the feed; ships fail harmlessly until
+                    # the cluster heals or its lease tombstones it
+                    self.shipper.register(name)
+                    continue
+                self.shipper.register_resume(name, applied, tail, tail_base)
+        # a cluster whose registration (lease grant + /clusters/ put) was
+        # still in the uncommitted tail is unknown to the recovered store and
+        # its surviving heartbeat can only keepalive a dead lease id: re-grant
+        # and re-put for it here, WITHOUT re-scheduling its heartbeat timer
+        # (the original timer never stopped). Partitioned clusters are skipped
+        # and re-register by hand (or stay tombstoned) after they heal.
+        from repro.core.transport import DeliveryError
+        for name in sorted(self.agents):
+            agent = self.agents[name]
+            try:
+                known = agent.ow.get(f"/clusters/{name}")
+                if known is None:
+                    agent.lease = agent.ow.lease_grant(agent.lease_ttl)
+                    agent.ow.put(f"/clusters/{name}", {
+                        "idx": agent.idx,
+                        "capabilities": agent.local_plane.capabilities(),
+                        "agent_addr": list(agent.addr),
+                    }, lease=agent.lease)
+            except DeliveryError:
+                continue
+        return dict(self.overwatch.recovery_stats)
 
     # -------------------------------------------------------------------- operation
     def tick(self, dt: float = 1.0, n: int = 1) -> None:

@@ -84,7 +84,17 @@ class LocalReplica(ReplicaState):
 
     def apply_ship(self, batch: dict) -> int:
         """Apply one shipped delta envelope; returns the applied revision
-        (the cumulative ack the shipper records)."""
+        (the cumulative ack the shipper records). A ``reset`` batch (crash
+        recovery re-seeded this feed from a state the replica's horizon
+        predates) drops the local snapshot first: keys deleted between the
+        horizon and the crash have no tombstone anywhere to ship, so only a
+        clean re-apply converges."""
+        if batch.get("reset"):
+            self._kv.clear()
+            self._keys = []
+            self._added.clear()
+            self._removed.clear()
+            self.applied_rev = 0
         self.apply_events(batch["events"])
         if batch["rev"] > self.applied_rev:
             self.applied_rev = batch["rev"]
@@ -99,11 +109,16 @@ class _Feed:
     above it is owed to this cluster) plus, until the first confirmed ship,
     the bootstrap snapshot of the shipped prefixes."""
 
-    __slots__ = ("acked_rev", "seed")
+    __slots__ = ("acked_rev", "seed", "reset")
 
-    def __init__(self, acked_rev: int, seed: Dict[str, tuple]):
+    def __init__(self, acked_rev: int, seed: Dict[str, tuple],
+                 reset: bool = False):
         self.acked_rev = acked_rev
         self.seed = seed                      # key -> (event, value, rev)
+        # crash recovery re-seeded this feed from scratch: the first ship
+        # carries a reset marker so the replica drops state the seed cannot
+        # tombstone (cleared once a ship is confirmed)
+        self.reset = reset
 
 
 class ReplicaShipper:
@@ -147,6 +162,37 @@ class ReplicaShipper:
         drop whatever only this cluster still owed."""
         self._feeds.pop(cluster, None)
 
+    def register_resume(self, cluster: str, applied_rev: int,
+                        tail: List[tuple], tail_base: int) -> bool:
+        """Crash-recovery feed resume. ``tail`` is the recovered overwatch's
+        replayed-event list (revision-ordered) and ``tail_base`` the highest
+        shard-snapshot revision — everything at or below ``tail_base`` exists
+        only as folded snapshot state, not as replayable events.
+
+        If the cluster's replica horizon (``applied_rev``) is at or above
+        ``tail_base``, every event it missed is in the tail: seed exactly the
+        tail entries above its horizon and resume cumulatively — the replica
+        never re-downloads state it already holds. A horizon below
+        ``tail_base`` cannot be caught up by deltas (deletions between the
+        horizon and the snapshot left no replayable tombstone), so the feed
+        falls back to a full bootstrap seed with a reset marker. Returns True
+        when the feed resumed from the horizon, False on full reseed."""
+        if applied_rev < tail_base:
+            self.register(cluster)
+            self._feeds[cluster].reset = True
+            return False
+        seed: Dict[str, tuple] = {}
+        for event, key, value, rev in tail:
+            if rev > applied_rev and any(key.startswith(p)
+                                         for p in self.prefixes):
+                seed[key] = (event, value, rev)
+        self._feeds[cluster] = _Feed(acked_rev=applied_rev, seed=seed)
+        # the recovered primary's revision is fully covered by (replica state
+        # up to applied_rev) + this seed: let ship revs advance to it even
+        # before the first post-recovery mutation lands in the watch log
+        self._seen_rev = max(self._seen_rev, self.ow._rev)
+        return True
+
     # ----------------------------------------------------------- event intake
     def _on_events(self, events: List[tuple]) -> None:
         """O(matching events), independent of the cluster count."""
@@ -180,6 +226,8 @@ class ReplicaShipper:
         batch = {"events": events,
                  "rev": max(feed.acked_rev, self._seen_rev),
                  "clock": self.ow.fabric.clock}
+        if feed.reset:
+            batch["reset"] = True
         return Envelope({"kind": "replica_batch", "batch": batch})
 
     def _ship_msg(self, cluster: str, feed: _Feed, msg: Envelope) -> bool:
@@ -198,6 +246,7 @@ class ReplicaShipper:
             return False
         feed.acked_rev = resp.get("applied_rev", batch["rev"])
         feed.seed = {}
+        feed.reset = False
         self.stats["ships"] += 1
         self.stats["shipped_events"] += len(batch["events"])
         self.stats["shipped_bytes"] += msg.nbytes
@@ -226,7 +275,7 @@ class ReplicaShipper:
         landed = 0
         for cluster in sorted(self._feeds):
             feed = self._feeds[cluster]
-            if feed.seed:                    # bootstrap: unique by definition
+            if feed.seed or feed.reset:      # bootstrap: unique by definition
                 msg = self._build_msg(feed)
             else:
                 msg = shared.get(feed.acked_rev)

@@ -207,6 +207,11 @@ class Fabric:
         self.message_log: RingLog = RingLog(message_log_limit)
         self._timers: List[Tuple[float, int, Callable]] = []   # real min-heap
         self._timer_seq = itertools.count()      # FIFO tie-break at one deadline
+        # fault-injection seam: invoked as (cluster, addr, payload) right
+        # before every handler call. First-class on the fabric (not a handler
+        # wrapper) so it keeps observing through service rebuilds and counts
+        # recovery traffic too (repro.core.faults arms it).
+        self.on_deliver: Optional[Callable[[str, Address, Any], None]] = None
 
     # ------------------------------------------------------------------- topology
     def register_handler(self, cluster: str, addr: Address,
@@ -348,6 +353,8 @@ class Fabric:
             handler = self._handlers.get((cluster, addr))
             if handler is None:
                 raise DeliveryError(f"no endpoint at {cluster}:{addr}")
+            if self.on_deliver is not None:
+                self.on_deliver(cluster, addr, payload)
             resp = handler(payload)
             if not need_rbytes:          # purely-local round trip: no walk
                 return resp, 0
@@ -372,6 +379,8 @@ class Fabric:
         handler = self._handlers.get((cluster, addr))
         if handler is None:
             raise DeliveryError(f"no endpoint at {cluster}:{addr}")
+        if self.on_deliver is not None:
+            self.on_deliver(cluster, addr, payload)
         resp = handler(payload)
         if not need_rbytes:
             return resp, 0

@@ -60,11 +60,20 @@ identical routing from the shard count alone — no topology exchange.
 behavior-identical to the unsharded broker. Both ``depth_many`` and
 ``changed_depths`` accept a family filter so a publisher only reports the
 families its shard owns.
+
+Durability (the crash-survivable control plane): constructed with a
+``repro.core.durability.LogStore``, every state-changing op appends a WAL
+record and the composer group-commits once per tick — taskdb before broker,
+so an acknowledged effect is always at least as durable as its ack. After a
+crash ``recover()`` rebuilds from snapshot + replay, requeues every in-flight
+lease, marks all surviving messages ``redelivered`` (workers dedup-probe the
+taskdb before re-executing), and bumps a persisted tag *epoch* so acks for
+pre-crash tags are recognized as stale (``stats["stale_acks"]``) instead of
+releasing someone else's lease.
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 from collections import Counter, deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
@@ -114,16 +123,29 @@ def _family_match(families: FamilyFilter, queue: str) -> bool:
     return queue in families
 
 
+TAG_EPOCH_STRIDE = 1_000_000_000
+
+
 class Broker:
     def __init__(self, clock_fn=None, lease: float = 30.0,
-                 requeue_front: bool = False):
+                 requeue_front: bool = False,
+                 durability=None, shard_name: str = "broker"):
         self.queues: Dict[str, Deque[dict]] = {}
-        # tag -> (queue, msg, expires_at); tags are unique per pull, so a heap
-        # entry is stale iff its tag is gone from this table
-        self.inflight: Dict[int, Tuple[str, dict, float]] = {}
+        # parallel to queues: per-message redelivered flags. Kept as a SEPARATE
+        # aligned deque (not wrapped tuples) so queue entries stay the raw
+        # message dicts clients pushed — observable queue state is unchanged.
+        self._flags: Dict[str, Deque[bool]] = {}
+        # tag -> (queue, msg, expires_at, redelivered); tags are unique per
+        # pull, so a heap entry is stale iff its tag is gone from this table
+        self.inflight: Dict[int, Tuple[str, dict, float, bool]] = {}
         self._expiry_heap: List[Tuple[float, int]] = []
         self._inflight_count: Counter = Counter()    # per-queue leased-out
-        self._tag = itertools.count(1)
+        # tag = epoch * TAG_EPOCH_STRIDE + n. Epoch 0 (no durability, or no
+        # crash yet) makes tags the plain 1,2,3,... they always were; recovery
+        # bumps the epoch so every pre-crash tag misses the new lease table
+        # and lands in stats["stale_acks"] instead of acking the wrong lease.
+        self._epoch = 0
+        self._tag_n = 0
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.lease = lease
         self.requeue_front = requeue_front
@@ -131,6 +153,14 @@ class Broker:
         self.stats: Counter = Counter()              # expire_scanned/redelivered
         self._depth_dirty: set = set()
         self._published: Dict[str, Tuple[int, int]] = {}
+        # durability: every state-changing op appends a WAL record (see the
+        # replay table in _apply_replay); the composer group-commits per tick
+        # and snapshots via snapshot_payload(). None => identical behavior.
+        self._dur = durability
+        self._shard = shard_name
+        self.recovered_task_keys: set = set()
+        if durability is not None and durability.has_data(shard_name):
+            self.recover()
 
     # ------------------------------------------------------------------ leases
     def _expire(self) -> None:
@@ -148,53 +178,72 @@ class Broker:
             rec = self.inflight.pop(tag, None)
             if rec is None:
                 continue                     # stale entry (acked) — lazy delete
-            queue, msg, _ = rec
-            self._requeue(queue, msg, self.requeue_front)
+            queue, msg = rec[0], rec[1]
+            self._requeue(queue, msg, self.requeue_front, redelivered=True)
             self.stats["redelivered"] += 1          # lease-expiry redelivery
+            if self._dur is not None:
+                self._dur.append(self._shard, ("exp", tag))
 
-    def _requeue(self, queue: str, msg: dict, front: bool) -> None:
+    def _requeue(self, queue: str, msg: dict, front: bool,
+                 redelivered: bool = True) -> None:
         q = self.queues.setdefault(queue, deque())
+        f = self._flags.setdefault(queue, deque())
         if front:
             q.appendleft(msg)
+            f.appendleft(redelivered)
         else:
             q.append(msg)
+            f.append(redelivered)
         self._inflight_count[queue] -= 1
         self._depth_dirty.add(queue)
 
     # ------------------------------------------------------------- op helpers
-    def _push(self, queue: str, msg: dict) -> None:
+    def _next_tag(self) -> int:
+        self._tag_n += 1
+        return self._epoch * TAG_EPOCH_STRIDE + self._tag_n
+
+    def _push(self, queue: str, msg: dict, redelivered: bool = False) -> None:
         self.queues.setdefault(queue, deque()).append(msg)
+        self._flags.setdefault(queue, deque()).append(redelivered)
         self._depth_dirty.add(queue)
 
-    def _pull_one(self, queue: str) -> Optional[Tuple[dict, int]]:
+    def _pull_one(self, queue: str) -> Optional[Tuple[dict, int, bool]]:
         q = self.queues.get(queue)
         if not q:
             return None
         item = q.popleft()
-        tag = next(self._tag)
+        flag = self._flags[queue].popleft()
+        tag = self._next_tag()
         expires = self.clock_fn() + self.lease
-        self.inflight[tag] = (queue, item, expires)
+        self.inflight[tag] = (queue, item, expires, flag)
         heapq.heappush(self._expiry_heap, (expires, tag))
         self._inflight_count[queue] += 1
         self._depth_dirty.add(queue)
-        return item, tag
+        return item, tag, flag
 
     def _ack_one(self, tag) -> bool:
         rec = self.inflight.pop(tag, None)
         if rec is None:
-            return False                     # idempotent: unknown/double ack
+            self.stats["stale_acks"] += 1    # idempotent: unknown/double ack
+            return False
         self._inflight_count[rec[0]] -= 1
         self._depth_dirty.add(rec[0])
+        if self._dur is not None:
+            self._dur.append(self._shard, ("ack", tag))
         return True
 
     def _nack_one(self, tag, front) -> bool:
         """Explicit return of a leased message (idempotent like ack)."""
         rec = self.inflight.pop(tag, None)
         if rec is None:
+            self.stats["stale_acks"] += 1
             return False
         self._requeue(rec[0], rec[1],
-                      self.requeue_front if front is None else front)
+                      self.requeue_front if front is None else front,
+                      redelivered=rec[3])
         self.stats["redelivered_nacked"] += 1
+        if self._dur is not None:
+            self._dur.append(self._shard, ("nack", tag, front))
         return True
 
     def _depth_of(self, queue: str) -> Tuple[int, int]:
@@ -207,33 +256,59 @@ class Broker:
         self.op_counts[op] += 1
         self._expire()
         if op == "push":
-            self._push(msg["queue"], msg["msg"])
+            redel = bool(msg.get("redelivered"))
+            self._push(msg["queue"], msg["msg"], redel)
+            if self._dur is not None:
+                self._dur.append(self._shard,
+                                 ("push", msg["queue"], msg["msg"], redel))
             return {"ok": True, "depth": len(self.queues[msg["queue"]])}
         if op == "push_many":
+            redel = bool(msg.get("redelivered"))
             q = self.queues.setdefault(msg["queue"], deque())
             q.extend(msg["msgs"])
+            self._flags.setdefault(msg["queue"], deque()).extend(
+                redel for _ in msg["msgs"])
             self._depth_dirty.add(msg["queue"])
+            if self._dur is not None:
+                self._dur.append(self._shard,
+                                 ("pushN", msg["queue"], msg["msgs"], redel))
             return {"ok": True, "depth": len(q)}
         if op == "pull":
             got = self._pull_one(msg["queue"])
             if got is None:
                 return {"ok": True, "msg": None}
-            return {"ok": True, "msg": got[0], "tag": got[1]}
+            if self._dur is not None:
+                self._dur.append(self._shard,
+                                 ("pullN", msg["queue"], [got[1]]))
+            resp = {"ok": True, "msg": got[0], "tag": got[1]}
+            if got[2]:
+                resp["redelivered"] = True
+            return resp
         if op == "pull_many":
             msgs: List[dict] = []
             tags: List[int] = []
+            flags: List[bool] = []
             for _ in range(max(int(msg.get("max_n", 1)), 0)):
                 got = self._pull_one(msg["queue"])
                 if got is None:
                     break
                 msgs.append(got[0])
                 tags.append(got[1])
-            return {"ok": True, "msgs": msgs, "tags": tags}
+                flags.append(got[2])
+            if tags and self._dur is not None:
+                self._dur.append(self._shard, ("pullN", msg["queue"], tags))
+            resp = {"ok": True, "msgs": msgs, "tags": tags}
+            if any(flags):
+                # only present when something needs a dedup probe: the clean
+                # path's response stays byte-identical to the flagless broker
+                resp["redelivered"] = flags
+            return resp
         if op == "ack":
             self._ack_one(msg.get("tag"))
             return {"ok": True}
         if op == "ack_many":
-            acked = sum(1 for t in msg.get("tags", ()) if self._ack_one(t))
+            tags = msg.get("tags", ())
+            acked = sum(1 for t in tags if self._ack_one(t))
             return {"ok": True, "acked": acked}
         if op == "nack":
             self._nack_one(msg.get("tag"), msg.get("requeue_front"))
@@ -263,6 +338,101 @@ class Broker:
                 depths[q] = {"ready": ready, "inflight": inflight}
             return {"ok": True, "depths": depths}
         return {"ok": False, "error": f"unknown op {op}"}
+
+    # ------------------------------------------------------------- durability
+    def snapshot_payload(self) -> dict:
+        """Full broker state for snapshot+truncate compaction: ready queues
+        with their redelivered flags, the in-flight lease table, and the tag
+        epoch/counter. ``Broker.recover()`` rebuilds from this plus the
+        post-snapshot WAL tail."""
+        return {
+            "epoch": self._epoch, "tag_n": self._tag_n,
+            "queues": {q: [[m, f] for m, f in
+                           zip(dq, self._flags.get(q, ()))]
+                       for q, dq in self.queues.items() if dq},
+            "inflight": [[tag, rec[0], rec[1], rec[2], rec[3]]
+                         for tag, rec in self.inflight.items()],
+        }
+
+    def _apply_replay(self, rec) -> None:
+        """One WAL record. Types: ``push``/``pushN`` (queue, msg(s), flag),
+        ``pullN`` (queue, tags — head messages move in-flight under the
+        recorded tags), ``ack``/``nack`` (tag), ``exp`` (lease-expiry
+        requeue), ``epoch``. Replay is NOT idempotent (pull/ack move state);
+        the LogStore's LSN filtering guarantees each record applies exactly
+        once, starting right after the snapshot."""
+        kind = rec[0]
+        if kind == "push":
+            self._push(rec[1], rec[2], rec[3])
+        elif kind == "pushN":
+            for m in rec[2]:
+                self._push(rec[1], m, rec[3])
+        elif kind == "pullN":
+            q = self.queues.get(rec[1])
+            flags = self._flags.get(rec[1])
+            for tag in rec[2]:
+                if not q:
+                    break
+                self.inflight[tag] = (rec[1], q.popleft(), 0.0,
+                                      flags.popleft())
+                self._inflight_count[rec[1]] += 1
+        elif kind == "ack":
+            self._ack_one(rec[1])
+        elif kind == "nack":
+            self._nack_one(rec[1], rec[2])
+        elif kind == "exp":
+            irec = self.inflight.pop(rec[1], None)
+            if irec is not None:
+                self._requeue(irec[0], irec[1], self.requeue_front,
+                              redelivered=True)
+        elif kind == "epoch":
+            self._epoch = max(self._epoch, rec[1])
+
+    def recover(self) -> None:
+        """Rebuild from snapshot + WAL replay, then (1) requeue every
+        recovered in-flight message — its pre-crash lease died with the
+        worker RPCs — (2) mark every surviving ready message redelivered, so
+        workers dedup-probe against the taskdb before executing (an ack the
+        crash swallowed means the message may already have run), and (3) bump
+        and immediately persist the tag epoch so stale acks can never land."""
+        dur = self._dur
+        self._dur = None                 # replay must not re-log itself
+        try:
+            payload, records = dur.load(self._shard)
+            if payload:
+                self._epoch = payload["epoch"]
+                self._tag_n = payload["tag_n"]
+                for q, items in payload["queues"].items():
+                    dq = self.queues.setdefault(q, deque())
+                    fq = self._flags.setdefault(q, deque())
+                    for msg, flag in items:
+                        dq.append(msg)
+                        fq.append(flag)
+                for tag, q, msg, expires, flag in payload["inflight"]:
+                    self.inflight[tag] = (q, msg, expires, flag)
+                    self._inflight_count[q] += 1
+            for rec in records:
+                self._apply_replay(rec)
+            self.stats["recovery_replayed"] += len(records)
+            for tag in sorted(self.inflight):
+                irec = self.inflight.pop(tag)
+                self._requeue(irec[0], irec[1], False, redelivered=True)
+                self.stats["recovered_inflight"] += 1
+            self._expiry_heap = []
+            for q, flags in self._flags.items():
+                self._flags[q] = deque(True for _ in flags)
+            self.recovered_task_keys = {
+                (m["dag"], m["task"], m["try"])
+                for dq in self.queues.values() for m in dq
+                if isinstance(m, dict) and "dag" in m and "task" in m}
+        finally:
+            self._dur = dur
+        self._epoch += 1
+        self._tag_n = 0
+        dur.append(self._shard, ("epoch", self._epoch))
+        dur.commit(self._shard)          # epoch durable before any new lease
+        self._depth_dirty = set(self.queues) | set(self._inflight_count)
+        self._published = {}
 
     # ------------------------------------------------------- depth publication
     def changed_depths(self, families: FamilyFilter = None) -> Dict[str, dict]:

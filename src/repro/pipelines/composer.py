@@ -41,6 +41,24 @@ scheduler coalesces each tick's frontier into one ``upsert_many`` plus one
 ``pull_many`` and commit through ``upsert_many``/``ack_many``.
 ``pipelined=False`` keeps the seed's per-task protocol (4+ RPCs per task) —
 the two produce identical terminal taskdb states.
+
+Crash survival (the durable control plane): with a shared ``LogStore``
+(``durability=``) the taskdb and every broker shard write WAL records as they
+mutate, group-committed once per composer tick — taskdb FIRST, then brokers,
+so an ack can only be durable if the rows it covers are too (the invariant
+that makes post-crash redelivery loss-free). ``recover()`` rebuilds the whole
+master-hosted pipeline after a crash of the global plane: fresh
+broker/taskdb services replay their snapshots + WAL onto the same fabric
+addresses, a fresh scheduler re-registers the DAGs and probes the recovered
+table from cursor 0, surviving workers run the recovery barrier (drop
+unexecuted leases, retry interrupted commits verbatim, re-upsert their
+``recent_rows`` resync rings), the autoscaler is rebuilt and ADOPTS the
+surviving worker-pod fleet from overwatch placements, and ``_reseed_tasks``
+re-pushes (flagged redelivered) any queued/running task whose broker message
+died with the uncommitted tail. Exactly-once for executions holds across any
+master crash; the one fundamental exception — a PARTITIONED worker's
+executed-but-unlanded batch may re-run elsewhere — is the classic
+impossibility, not a recovery bug.
 """
 from __future__ import annotations
 
@@ -51,7 +69,7 @@ from repro.core.service_graph import AppSpec, Pod, Service
 from repro.core.transport import DeliveryError
 from repro.pipelines.broker import Broker, BrokerRouter, broker_service_names
 from repro.pipelines.dag import DAG
-from repro.pipelines.scheduler import Scheduler
+from repro.pipelines.scheduler import Scheduler, queue_for
 from repro.pipelines.services import ServiceClient, ServiceEndpoint
 from repro.pipelines.taskdb import TaskDB
 from repro.pipelines.worker import PipelineWorker
@@ -93,10 +111,19 @@ class HybridComposer:
                  worker_setup=None,
                  broker_shards: int = 1,
                  depth_gated_workers: bool = False,
-                 depth_gate_max_lag: float = 2.0):
+                 depth_gate_max_lag: float = 2.0,
+                 durability=None,
+                 wal_snapshot_every: int = 8192):
         self.plane = plane
         self.worker_batch = worker_batch
         self.pipelined = pipelined
+        # durability (repro.core.durability.LogStore): WAL shards "taskdb" +
+        # one per broker service, group-committed per tick (taskdb first).
+        # None => byte-identical to the non-durable composer. Public: the
+        # chaos harness reaches it to model commit loss at a crash.
+        self.durability = durability
+        self.wal_snapshot_every = wal_snapshot_every
+        self.recovery_stats: Dict[str, int] = {}
         # applied to every worker, static AND dynamically spawned — the hook
         # for registering custom task kinds on autoscaled pods
         self.worker_setup = worker_setup
@@ -112,22 +139,7 @@ class HybridComposer:
                                      self.broker_shards)
         plane.upload_spec(self.spec)
 
-        fabric = plane.fabric
-        master_state = plane.master_agent.state
-        self.brokers = [Broker(clock_fn=lambda: fabric.clock)
-                        for _ in range(self.broker_shards)]
-        self.broker = self.brokers[0]   # single-shard accessor (tests, back-compat)
-        self.taskdb = TaskDB()
-        for sname, shard in zip(self._broker_services, self.brokers):
-            ServiceEndpoint(fabric, self.spec, master_state, sname,
-                            shard.handle)
-        ServiceEndpoint(fabric, self.spec, master_state, "taskdb",
-                        self.taskdb.handle)
-
-        sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
-        self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
-                                   batched=pipelined,
-                                   broker_for=self.router.service_for_queue)
+        self._build_master_services()
 
         self.workers: List[PipelineWorker] = []
         for cluster, names in workers.items():
@@ -139,6 +151,31 @@ class HybridComposer:
         self._published_queues: set = set()
         self._spec_dirty = False
         self.autoscaler = None
+        self._autoscaler_args: Optional[tuple] = None
+        self._dags: Dict[str, DAG] = {}
+
+    def _build_master_services(self) -> None:
+        """(Re)build the master-hosted services — broker shards, taskdb,
+        scheduler — on their fabric addresses. With durability attached,
+        fresh brokers/taskdb recover from their WAL shards in their
+        constructors; ``register_handler`` overwrites, so a rebuild (crash
+        recovery) answers on the exact addresses surviving workers use."""
+        fabric = self.plane.fabric
+        master_state = self.plane.master_agent.state
+        self.brokers = [Broker(clock_fn=lambda: fabric.clock,
+                               durability=self.durability, shard_name=sname)
+                        for sname in self._broker_services]
+        self.broker = self.brokers[0]   # single-shard accessor (tests, back-compat)
+        self.taskdb = TaskDB(durability=self.durability)
+        for sname, shard in zip(self._broker_services, self.brokers):
+            ServiceEndpoint(fabric, self.spec, master_state, sname,
+                            shard.handle)
+        ServiceEndpoint(fabric, self.spec, master_state, "taskdb",
+                        self.taskdb.handle)
+        sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
+        self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
+                                   batched=self.pipelined,
+                                   broker_for=self.router.service_for_queue)
 
     def _make_worker(self, name: str, cluster: str,
                      queues: Tuple[str, ...]) -> PipelineWorker:
@@ -177,6 +214,7 @@ class HybridComposer:
 
     # ------------------------------------------------------------------- user API
     def add_dag(self, dag: DAG) -> None:
+        self._dags[dag.dag_id] = dag
         self.scheduler.add_dag(dag)
 
     def tick(self) -> None:
@@ -192,7 +230,28 @@ class HybridComposer:
         self.publish_queue_depths()
         if self.autoscaler is not None:
             self.autoscaler.reconcile()
+        self._commit_pipeline_wal()
         self.plane.tick()
+
+    def _commit_pipeline_wal(self) -> None:
+        """Per-tick group commit of the pipeline WAL shards. Taskdb FIRST:
+        a crash between the two commits may leave an ack durable only when
+        the rows it covers already are — never an acked task whose terminal
+        row was lost (that would be a silently dropped execution). Snapshot +
+        truncate whenever a shard's replay tail outgrows
+        ``wal_snapshot_every``."""
+        dur = self.durability
+        if dur is None:
+            return
+        dur.commit(self.taskdb._shard)
+        if (dur.records_since_snapshot(self.taskdb._shard)
+                >= self.wal_snapshot_every):
+            dur.snapshot(self.taskdb._shard, self.taskdb.snapshot_payload())
+        for shard in self.brokers:
+            dur.commit(shard._shard)
+            if (dur.records_since_snapshot(shard._shard)
+                    >= self.wal_snapshot_every):
+                dur.snapshot(shard._shard, shard.snapshot_payload())
 
     # ------------------------------------------------------------- elastic fleet
     def add_worker(self, name: str, cluster: str,
@@ -223,6 +282,13 @@ class HybridComposer:
         removed pod can no longer reach the broker — Algorithm 3 is rebuilt
         default-deny on every re-broadcast). ``broadcast=False`` defers like
         ``add_worker``."""
+        # A drained pod's final rows + acks may still sit in the uncommitted
+        # WAL tail, and its ``recent_rows`` resync ring leaves the fleet with
+        # it: force the group commit NOW, so a crash after removal can never
+        # lose work only this (now gone) pod could have re-proven terminal.
+        # Pod removals are rare (scale-down / lost-pod events), so the extra
+        # commit is noise.
+        self._commit_pipeline_wal()
         if worker in self.workers:
             self.workers.remove(worker)
         if worker.pod not in self.spec.partition:
@@ -246,8 +312,106 @@ class HybridComposer:
         """Create and wire a ``repro.autoscale.Reconciler`` into the tick
         loop (see that module for the policy/quota/spillover model)."""
         from repro.autoscale.reconciler import Reconciler
+        self._autoscaler_args = (policies, dict(kwargs))
         self.autoscaler = Reconciler(self, policies, **kwargs)
         return self.autoscaler
+
+    # ----------------------------------------------------------- crash recovery
+    def recover(self) -> Dict[str, int]:
+        """Rebuild the master-hosted pipeline after a global-plane crash
+        (call AFTER ``plane.recover_global_plane()``). The sequence is the
+        recovery barrier the worker docstring's contract assumes:
+
+          1. fresh brokers/taskdb/scheduler replay their WAL shards onto the
+             same fabric addresses; DAGs re-register (terminal states come
+             back through the scheduler's first probe from cursor 0);
+          2. surviving workers drop unexecuted leases (the recovered broker
+             requeued them flagged), retry any commit the crash interrupted
+             — verbatim, no re-execution — and re-upsert their
+             ``recent_rows`` resync rings, making every completed execution's
+             terminal row durable even if its original commit died with the
+             uncommitted tail;
+          3. the autoscaler is rebuilt and adopts the surviving worker-pod
+             fleet from overwatch placements (finishing any interrupted
+             drains);
+          4. ``_reseed_tasks`` re-pushes lost messages / marks broker-held
+             ones, then the WAL is committed so recovery itself is durable.
+
+        Workers on partitioned clusters are skipped wherever they are
+        unreachable and converge after heal via lease expiry + redelivery."""
+        self._build_master_services()
+        for dag in self._dags.values():
+            self.scheduler.add_dag(dag)
+        stats = {"dropped_leases": 0, "retried_commits": 0,
+                 "resynced_rows": 0,
+                 "taskdb_replayed": self.taskdb.recovery_replayed,
+                 "broker_replayed": sum(
+                     b.stats.get("recovery_replayed", 0)
+                     for b in self.brokers)}
+        for w in list(self.workers):
+            stats["dropped_leases"] += w.reset_after_master_restart()
+            try:
+                if w._pending_commit is not None:
+                    w.retry_pending()
+                    stats["retried_commits"] += 1
+                rows = list(w.recent_rows)
+                if rows:
+                    w.client.call("taskdb", {"op": "upsert_many",
+                                             "rows": rows})
+                    stats["resynced_rows"] += len(rows)
+            except DeliveryError:
+                continue   # partitioned: converges after heal via redelivery
+        if self._autoscaler_args is not None:
+            from repro.autoscale.reconciler import Reconciler
+            policies, kwargs = self._autoscaler_args
+            self.autoscaler = Reconciler(self, policies, **kwargs)
+            stats["adopted_pods"] = self.autoscaler.adopt(self.workers)
+        stats.update(self._reseed_tasks())
+        # recovered /queues/ state may predate the last published depths:
+        # resync the tombstone set to the store and force a full republish
+        ow_queues = self.plane.overwatch.handle(
+            {"op": "range", "prefix": "/queues/"})["items"]
+        self._published_queues = {k[len("/queues/"):] for k in ow_queues}
+        self._depth_published_at = None
+        self._commit_pipeline_wal()
+        self.recovery_stats = stats
+        return stats
+
+    def _reseed_tasks(self) -> Dict[str, int]:
+        """Close the scheduler-vs-broker gap the crash tore open. After WAL
+        replay the taskdb and brokers are each internally consistent but may
+        disagree: a task row can say queued/running while its broker message
+        died in the uncommitted tail (re-push it, flagged redelivered — the
+        worker-side dedup probe makes that safe even if it actually ran), and
+        the broker can hold a message whose queued row was lost (mark it
+        running via ``note_inflight`` so the frontier never stages a
+        duplicate)."""
+        held: set = set()
+        for shard in self.brokers:
+            held |= shard.recovered_task_keys
+        held_tasks = {(d, t) for d, t, _ in held}
+        self.scheduler._probe()
+        pushes: Dict[str, List[dict]] = {}
+        reseeded = noted = 0
+        for did, dag in sorted(self._dags.items()):
+            state = self.scheduler._state.get(did, {})
+            for name, task in sorted(dag.tasks.items()):
+                row = state.get(name)
+                status = (row or {}).get("status")
+                if status in ("queued", "running"):
+                    if (did, name, row["try"]) not in held:
+                        pushes.setdefault(queue_for(task), []).append(
+                            Scheduler.build_message(did, task, row["try"]))
+                        reseeded += 1
+                elif row is None and (did, name) in held_tasks:
+                    self.scheduler.note_inflight(did, name)
+                    noted += 1
+        for q in sorted(pushes):
+            self.scheduler.client.call(
+                self.router.service_for_queue(q),
+                {"op": "push_many", "queue": q, "msgs": pushes[q],
+                 "redelivered": True})
+        return {"reseeded": reseeded, "noted_inflight": noted}
 
     # ------------------------------------------------------------ depth telemetry
     def publish_queue_depths(self) -> None:

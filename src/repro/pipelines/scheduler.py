@@ -217,8 +217,27 @@ class Scheduler:
         rows.append({"dag": did, "task": task.name, "try": try_n,
                      "status": "queued", "clock": clock})
         pushes.setdefault(queue_for(task), []).append(
-            {"dag": did, "task": task.name, "kind": task.kind,
-             "payload": task.payload, "try": try_n})
+            self.build_message(did, task, try_n))
+
+    @staticmethod
+    def build_message(did: str, task: Task, try_n: int) -> dict:
+        """The broker message for a task instance — also what crash recovery
+        re-pushes, so a reseeded message is byte-identical to a staged one."""
+        return {"dag": did, "task": task.name, "kind": task.kind,
+                "payload": task.payload, "try": try_n}
+
+    def note_inflight(self, dag_id: str, task: str) -> None:
+        """Crash recovery: the broker still holds a message for this task but
+        its taskdb row was lost with the uncommitted tail. Mark it running so
+        the frontier does not stage a duplicate; the broker's (flagged) copy
+        carries the execution, and its committed rows restore the real state."""
+        if dag_id not in self.dags or task not in self.dags[dag_id].tasks:
+            return
+        if task in self._done[dag_id] or task in self._failed[dag_id]:
+            return
+        self._running[dag_id].add(task)
+        self._candidates[dag_id].discard(task)
+        self._quiescent.discard(dag_id)
 
     def _flush(self, rows: List[dict],
                pushes: Dict[str, List[dict]]) -> None:

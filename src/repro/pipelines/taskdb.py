@@ -19,6 +19,14 @@ and a per-DAG change log, so
     round-trip — a worker commits an executed pull batch (running + terminal
     row per task) and the scheduler commits a whole ready frontier with a
     single RPC instead of one per row.
+
+Durability: with a ``LogStore`` attached, every upsert batch appends one
+``("upN", rows)`` WAL record; the snapshot is simply the row table. Replay
+re-runs ``_upsert`` (idempotent per key — the last write for a (dag, task,
+try) wins, exactly like live traffic) and marks every replayed row dirty, so
+a recovering scheduler probing from cursor 0 sees the complete state.
+``status_many`` is the workers' post-crash dedup probe: the status of each
+(dag, task, try) key, None for unknown rows.
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ from typing import Dict, List, Tuple
 class TaskDB:
     """In-memory table behind a service handler (swap for CloudSQL in prod)."""
 
-    def __init__(self):
+    def __init__(self, durability=None, shard_name: str = "taskdb"):
         self.rows: Dict[tuple, dict] = {}
         # dag -> task -> latest-try row (same row objects as self.rows)
         self._latest: Dict[str, Dict[str, dict]] = {}
@@ -39,6 +47,11 @@ class TaskDB:
         # outgrows the task count (bounded memory, cursor-stable)
         self._changes: Dict[str, List[Tuple[int, str]]] = {}
         self.op_counts: Counter = Counter()          # per-op RPC accounting
+        self._dur = durability
+        self._shard = shard_name
+        self.recovery_replayed = 0
+        if durability is not None and durability.has_data(shard_name):
+            self.recover()
 
     def _mark_dirty(self, dag: str, task: str) -> None:
         self._seq += 1
@@ -71,6 +84,8 @@ class TaskDB:
         self.op_counts[op] += 1
         if op == "upsert":
             self._upsert(msg)
+            if self._dur is not None:
+                self._dur.append(self._shard, ("upN", [msg]))
             return {"ok": True}
         if op == "upsert_many":
             # one batched commit: rows apply in list order, so a worker's
@@ -78,7 +93,16 @@ class TaskDB:
             # per-row protocol produced
             for row in msg["rows"]:
                 self._upsert(row)
+            if self._dur is not None:
+                self._dur.append(self._shard, ("upN", msg["rows"]))
             return {"ok": True, "n": len(msg["rows"])}
+        if op == "status_many":
+            # post-crash dedup probe: status per (dag, task, try), None if the
+            # row is unknown (a read — creates nothing, logs nothing)
+            statuses = [
+                (self.rows.get((k[0], k[1], int(k[2]))) or {}).get("status")
+                for k in msg["keys"]]
+            return {"ok": True, "statuses": statuses}
         if op == "get":
             key = (msg["dag"], msg["task"], int(msg.get("try", 1)))
             return {"ok": True, "row": self.rows.get(key)}
@@ -98,6 +122,29 @@ class TaskDB:
                     deltas[dag] = tasks
             return {"ok": True, "deltas": deltas, "cursor": self._seq}
         return {"ok": False, "error": f"unknown op {op}"}
+
+    # ------------------------------------------------------------- durability
+    def snapshot_payload(self) -> dict:
+        return {"rows": [dict(r) for r in self.rows.values()]}
+
+    def recover(self) -> None:
+        """Snapshot rows + replayed WAL batches through the normal ``_upsert``
+        path: the latest-try view and change log rebuild as a side effect, and
+        every recovered row is dirty from cursor 0 — a fresh scheduler's first
+        probe sees the full surviving state."""
+        dur = self._dur
+        self._dur = None
+        try:
+            payload, records = dur.load(self._shard)
+            if payload:
+                for row in payload["rows"]:
+                    self._upsert(row)
+            for rec in records:
+                for row in rec[1]:
+                    self._upsert(row)
+            self.recovery_replayed = len(records)
+        finally:
+            self._dur = dur
 
     def _dag_delta(self, dag: str, since: int) -> dict:
         """Latest rows for tasks changed after cursor ``since``."""

@@ -48,10 +48,25 @@ pod's job and publishes the drained state). Because every leased tag is
 acked exactly after its terminal row is durable, the broker is left with no
 lease to expire — nothing is redelivered, nothing runs twice. A drained
 worker's ``tick()`` is a no-op forever after.
+
+Crash survival (the durable control plane): workers live on their own
+clusters and SURVIVE a master crash — the recovery contract has three parts.
+(1) An executed-but-uncommitted batch is stashed in ``_pending_commit``
+before any RPC, so a commit interrupted by master death retries verbatim
+(same rows, same tags) instead of re-running handlers. (2) Messages the
+broker redelivers arrive flagged; before executing a flagged message the
+worker probes the taskdb (``status_many``) and skips anything already
+terminal — the cross-restart dedup that makes redelivery safe. (3)
+``reset_after_master_restart()`` drops unexecuted leases (the recovered
+broker already requeued them) and re-arms the worker; its small ring of
+recently executed terminal rows (``recent_rows``) is re-upserted by the
+composer's recovery barrier, closing the window where an execution's row was
+still volatile when the master died.
 """
 from __future__ import annotations
 
 import traceback
+from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.pipelines.services import ServiceClient
@@ -139,10 +154,17 @@ class PipelineWorker:
         self.depth_hint = depth_hint
         self.skipped_pulls = 0
         self.executed = 0
+        self.deduped = 0                # flagged redeliveries skipped as done
         self.state = "running"          # running | draining | drained
         self.on_drained = on_drained
-        # leased, uncommitted: (msg, tag, broker service that leased it)
-        self._inflight: List[Tuple[dict, int, str]] = []
+        # leased, uncommitted: (msg, tag, broker service, redelivered flag)
+        self._inflight: List[Tuple[dict, int, str, bool]] = []
+        # executed but not yet successfully committed: (rows, acks, executed)
+        self._pending_commit: Optional[tuple] = None
+        # resync ring: terminal rows this worker produced, re-upserted at the
+        # composer's recovery barrier in case their commit was still volatile
+        # when the master died (maxlen >> one tick's commit window)
+        self.recent_rows: deque = deque(maxlen=1024)
 
     def register(self, kind: str, fn: Callable[[dict], dict]) -> None:
         self.handlers[kind] = fn
@@ -172,6 +194,8 @@ class PipelineWorker:
         never pulls — the first step of the drain protocol."""
         if self.state != "running":
             return 0
+        if self._pending_commit is not None:
+            return 0                 # commit backlog first: no new leases
         pulled = 0
         for queue in self.queues:
             if self.depth_hint is not None and not self.depth_hint(queue):
@@ -183,7 +207,9 @@ class PipelineWorker:
                                           "max_n": self.batch})
             msgs = resp.get("msgs") or []
             tags = resp.get("tags") or []
-            self._inflight.extend((m, t, svc) for m, t in zip(msgs, tags))
+            flags = resp.get("redelivered") or [False] * len(msgs)
+            self._inflight.extend(
+                (m, t, svc, f) for m, t, f in zip(msgs, tags, flags))
             pulled += len(msgs)
         return pulled
 
@@ -193,21 +219,76 @@ class PipelineWorker:
         that leased work this batch (exactly one with an unsharded broker).
         Rows are durable before any broker forgets its leases, so a crash
         between the two at worst re-runs already-committed tasks (same-try
-        upserts are idempotent), never loses one."""
-        if not self._inflight:
-            return []
-        batch, self._inflight = self._inflight, []
-        rows: List[dict] = []
-        acks: Dict[str, List[int]] = {}      # broker service -> leased tags
-        executed: List[str] = []
-        for msg, tag, svc in batch:
-            rows.extend(self._run(msg))
-            executed.append(f"{msg['dag']}.{msg['task']}")
-            acks.setdefault(svc, []).append(tag)
-        self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
+        upserts are idempotent), never loses one.
+
+        The executed batch is stashed in ``_pending_commit`` BEFORE the
+        commit RPCs: if the master dies mid-commit the stash retries verbatim
+        on the recovery barrier (or the next tick after a heal) — handlers
+        never re-run for a batch that already executed. Flagged (redelivered)
+        messages are dedup-probed against the taskdb first; the probe costs
+        nothing on the clean path, where no flags arrive."""
+        if self._pending_commit is None:
+            if not self._inflight:
+                return []
+            batch, self._inflight = self._inflight, []
+            # dedup BEFORE executing: probing raises (master down) with
+            # nothing run yet, so dropping the batch back to lease expiry is
+            # always duplicate-free
+            done = self._probe_terminal(batch)
+            rows: List[dict] = []
+            acks: Dict[str, List[int]] = {}  # broker service -> leased tags
+            executed: List[str] = []
+            seen: set = set()
+            for msg, tag, svc, redel in batch:
+                key = (msg["dag"], msg["task"], msg["try"])
+                if (redel and key in done) or key in seen:
+                    self.deduped += 1        # already ran (here or elsewhere)
+                else:
+                    seen.add(key)
+                    pair = self._run(msg)
+                    rows.extend(pair)
+                    self.recent_rows.append(pair[-1])
+                    executed.append(f"{msg['dag']}.{msg['task']}")
+                acks.setdefault(svc, []).append(tag)
+            self._pending_commit = (rows, acks, executed)
+        rows, acks, executed = self._pending_commit
+        if rows:
+            self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
         for svc in sorted(acks):
             self.client.call(svc, {"op": "ack_many", "tags": acks[svc]})
+        self._pending_commit = None
         return executed
+
+    def _probe_terminal(self, batch) -> set:
+        """(dag, task, try) keys among the batch's FLAGGED messages that the
+        taskdb already shows terminal — one ``status_many`` RPC, only issued
+        when at least one message carries the redelivered flag."""
+        flagged = [(m["dag"], m["task"], m["try"])
+                   for m, _, _, redel in batch if redel]
+        if not flagged:
+            return set()
+        resp = self.client.call("taskdb", {
+            "op": "status_many", "keys": [list(k) for k in flagged]})
+        return {tuple(k) for k, st in zip(flagged, resp.get("statuses", ()))
+                if st in ("success", "failed")}
+
+    # -------------------------------------------------------- crash recovery
+    def retry_pending(self) -> List[str]:
+        """Re-issue a commit interrupted by master death (no-op otherwise)."""
+        if self._pending_commit is None:
+            return []
+        return self.commit_phase()
+
+    def reset_after_master_restart(self) -> int:
+        """Recovery barrier: drop unexecuted leases (the recovered broker
+        requeued them under fresh flags — holding them here would double-run),
+        keep ``_pending_commit`` for retry, and clear any ``on_drained``
+        closure wired to dead pre-crash services (the rebuilt autoscaler
+        re-arms draining pods). Returns the number of dropped leases."""
+        dropped = len(self._inflight)
+        self._inflight = []
+        self.on_drained = None
+        return dropped
 
     # ------------------------------------------------------------------- drain
     def drain(self) -> List[str]:
@@ -219,11 +300,15 @@ class PipelineWorker:
             return []
         self.state = "draining"
         executed = self.commit_phase() if self.pipelined else []
+        if self.pipelined and self._inflight:
+            # a retried pending commit went first; flush the live buffer too
+            executed += self.commit_phase()
         self._finish_drain()
         return executed
 
     def _finish_drain(self) -> None:
-        if self.state == "drained" or self._inflight:
+        if (self.state == "drained" or self._inflight
+                or self._pending_commit is not None):
             return
         self.state = "drained"
         if self.on_drained is not None:

@@ -102,3 +102,132 @@ def test_checkpoint_manifest_commit_is_atomic(tmp_path):
     restored, step, extra = mgr.restore(tree, step=3)
     assert step == 3 and extra["data"]["step"] == 3
     assert (restored["w"] == tree["w"]).all()
+
+
+# =====================================================================
+# Chaos: scripted master crashes against the durable pipeline plane.
+# Every scenario asserts the tentpole contract — after any number of
+# injected crash/restart cycles the DAG completes with every task
+# executed EXACTLY once (handlers count executions per task id).
+# =====================================================================
+from collections import Counter
+
+from repro.autoscale import ScalingPolicy
+from repro.core.durability import LogStore
+from repro.core.faults import ChaosHarness, FaultPlan, FaultPoint
+from repro.core.plane import SimLocalPlane
+from repro.pipelines import DAG, Task, HybridComposer
+
+
+def _chaos_pipeline(n_tasks, autoscale=False, fanout=False):
+    dur = LogStore()
+    plane = ManagementPlane(durability=dur, replica_fanout=fanout)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    executed = Counter()
+
+    def setup(w):
+        w.register("count",
+                   lambda p: executed.update([p["i"]]) or {"i": p["i"]})
+
+    workers = {} if autoscale else {"onprem-a": ["w0", "w1"],
+                                    "cloud-a": ["w2"]}
+    comp = HybridComposer(plane, workers=workers, durability=dur,
+                          worker_setup=setup)
+    if autoscale:
+        comp.attach_autoscaler(
+            [ScalingPolicy(family="f", queues=("default",), min_replicas=0,
+                           max_replicas=4, target_depth_per_worker=20.0)])
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="count", payload={"i": i})
+                           for i in range(n_tasks)]))
+    return plane, comp, executed
+
+
+def _assert_exactly_once(executed, n):
+    dups = {k: v for k, v in executed.items() if v > 1}
+    missing = [i for i in range(n) if i not in executed]
+    assert not dups, f"duplicate executions: {dups}"
+    assert not missing, f"lost executions: {missing}"
+    assert sum(executed.values()) == n
+
+
+def test_chaos_triple_crash_completes_exactly_once():
+    plane, comp, executed = _chaos_pipeline(300)
+    h = ChaosHarness(plane, comp, FaultPlan.crash_at_ops(40, 90, 150),
+                     downtime_ticks=2)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    assert h.crashes == 3
+    _assert_exactly_once(executed, 300)
+    # every recovery reports its replay work for the benchmark
+    assert len(h.recoveries) == 3
+    assert all(r["replayed"] > 0 for r in h.recoveries[1:])
+
+
+def test_chaos_kill_master_mid_recovery_storm():
+    # the second point lands inside the first crash's recovery barrier
+    # (worker resync / reseed RPCs advance the same op counter), so the
+    # restart path itself is killed and must be restartable from scratch
+    plane, comp, executed = _chaos_pipeline(200)
+    h = ChaosHarness(plane, comp, FaultPlan.crash_at_ops(50, 55),
+                     downtime_ticks=1)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    assert h.crashes == 2
+    _assert_exactly_once(executed, 200)
+
+
+def test_chaos_crash_between_pull_and_commit_retries_verbatim():
+    # the worker has pulled + executed a batch and is about to commit its
+    # rows: the crash lands just before that upsert_many is delivered. On
+    # recovery the worker retries the stashed commit VERBATIM — handlers
+    # never re-run, so the execution counter stays exactly-once.
+    plane, comp, executed = _chaos_pipeline(120)
+    h = ChaosHarness(plane, comp,
+                     FaultPlan([FaultPoint(op_kind="upsert_many", hit=3)]),
+                     downtime_ticks=2)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    assert h.crashes == 1
+    _assert_exactly_once(executed, 120)
+    assert h.recoveries[0]["pipeline"]["retried_commits"] >= 1
+
+
+def test_chaos_crash_during_autoscaler_drain():
+    # scale-down drains + removes pods while the plan crashes the master:
+    # a drained pod's final rows/acks must be durable BEFORE it leaves the
+    # fleet (remove_worker forces the group commit), or its redelivered
+    # batch re-executes — the exact bug this scenario regression-pins.
+    plane, comp, executed = _chaos_pipeline(400, autoscale=True, fanout=True)
+    h = ChaosHarness(plane, comp, FaultPlan.crash_at_ops(60, 200),
+                     downtime_ticks=3)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=600)
+    assert h.crashes == 2
+    _assert_exactly_once(executed, 400)
+    assert any(r["pipeline"].get("adopted_pods", 0) > 0
+               for r in h.recoveries)
+
+
+def test_chaos_partition_then_crash_then_heal():
+    # one worker cluster is cut off before it ever takes a lease, the
+    # master then dies and recovers, and the cluster heals later: the
+    # survivors' leases redeliver, the healed cluster rejoins, and the
+    # run still completes exactly-once.
+    plane, comp, executed = _chaos_pipeline(200)
+    plan = FaultPlan([
+        FaultPoint(action="partition", cluster="cloud-a", at_op=1),
+        FaultPoint(at_op=60),
+        FaultPoint(action="heal", cluster="cloud-a", at_op=120),
+    ])
+    h = ChaosHarness(plane, comp, plan, downtime_ticks=2)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=600)
+    assert h.crashes == 1
+    _assert_exactly_once(executed, 200)
+
+
+def test_chaos_seeded_plans_are_reproducible():
+    plan_a = FaultPlan.seeded(7, crashes=3)
+    plan_b = FaultPlan.seeded(7, crashes=3)
+    assert [p.at_op for p in plan_a.points] == \
+        [p.at_op for p in plan_b.points]
+    assert [p.at_op for p in FaultPlan.seeded(8).points] != \
+        [p.at_op for p in plan_a.points]
