@@ -29,10 +29,12 @@ bench-check:
 # (RPCs per task, fabric-clock ticks, simulated byte ledgers) —
 # control_plane's flatness ratios are wall-clock microseconds, too noisy to
 # gate on shared CI runners, but its locality block (cross-boundary bytes
-# per remote read, replica fan-out on/off) is deterministic and gated here
-# via the suite:part spec.
+# per remote read, replica fan-out on/off) and notify block (cross-boundary
+# bytes per delivered watch event, per-watcher round trips vs the
+# replica-fed watch plane) are deterministic and gated here via suite:part
+# specs.
 # durability:recovery re-runs the chaos matrix at a CI-sized task count and
 # gates hard zeros (lost/double-run tasks) plus the deterministic replay-
 # amplification ratio — record counts, host-independent
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality durability:recovery
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery

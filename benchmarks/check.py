@@ -21,6 +21,7 @@ counts) without paying for, or flaking on, the suite's wall-clock sweeps.
   PYTHONPATH=src python -m benchmarks.check                 # all gated suites
   PYTHONPATH=src python -m benchmarks.check pipeline_plane  # one suite
   PYTHONPATH=src python -m benchmarks.check control_plane:locality
+  PYTHONPATH=src python -m benchmarks.check control_plane:notify
   ... --dir DIR   # where the committed BENCH_*.json live (default ".")
 """
 from __future__ import annotations

@@ -18,6 +18,10 @@ the management-plane numbers a production deployment is sized with).
     round-trip baseline vs per-cluster replica fan-out — DETERMINISTIC byte
     counts, gated in CI (``benchmarks.check control_plane:locality``); the
     fan-out's acceptance bar is a >= 5x bytes/read cut at 256 clusters
+  * notify block: cross-boundary bytes per delivered watch EVENT, per-watcher
+    refresh round trips vs the replica-fed watch plane (N watchers share one
+    shipped envelope) — gated in CI (``control_plane:notify``); acceptance
+    bar is a >= 5x bytes/event cut at 64+ clusters, O(1) in watcher count
   * configuration-phase cost: Algorithm 5 runtime + messages for growing S
   * failure recovery: ticks from partition to re-dispatch
 
@@ -52,6 +56,10 @@ LOCALITY_TICKS = 6                       # heartbeat/ship rounds measured
 # fan-out exists for (one ship amortizes across ALL of a cluster's readers)
 LOCALITY_READS_PER_TICK = 16
 LOCALITY_QUEUES = 8                      # published /queues/<name> rows
+# notify block: remote watch subscribers per cluster — N watchers share one
+# shipped envelope under the replica-fed watch plane, vs one bounded-stale
+# refresh round trip per watcher per tick without it
+NOTIFY_WATCHERS = 8
 
 # Pre-overhaul numbers (seed implementation, same sweep, same machine class):
 # per-op cost grew ~14x from 32 to 256 clusters because every dispatch sorted
@@ -302,6 +310,13 @@ def bench_locality_point(n_clusters: int, fanout: bool,
         # directly comparable to (and bounded by) the cross-byte delta
         row["replica_ships"] = {k: v - base_ships.get(k, 0)
                                 for k, v in plane.shipper.stats.items()}
+        # a healthy fan-out serves every in-bound read locally: primary
+        # fallbacks (out-of-bound replica) must stay rare. Surfaced via the
+        # fabric's named counter and FAILED (ok=False trips the CI gate's
+        # incomplete-run check) if they stop being rare.
+        fallbacks = fabric.stats["fallback_reads"]
+        row["fallback_reads"] = fallbacks
+        row["ok"] = fallbacks <= max(1, reads // 100)
     return row
 
 
@@ -343,6 +358,120 @@ def run_json_locality() -> dict:
     (``benchmarks.check control_plane:locality``) skips the wall-clock
     sweeps entirely."""
     return run_locality()
+
+
+# -------------------------------------------------------------- notify block
+def bench_notify_point(n_clusters: int, fanout: bool,
+                       watchers: int = NOTIFY_WATCHERS,
+                       ticks: int = LOCALITY_TICKS) -> dict:
+    """Cross-boundary bytes per delivered watch EVENT with and without the
+    replica-fed watch plane.
+
+    Workload: ``watchers`` observers on every remote cluster follow the
+    published ``/queues/`` directory while every row churns every tick (the
+    composer's depth-publish worst case). Byte counts are DETERMINISTIC, so
+    the reduction ratio is CI-gateable.
+
+    ``fanout=False``: the pre-overhaul remote-observer protocol — there is
+    no cross-boundary subscription, so each watcher keeps its view current
+    with one bounded-staleness range round trip per tick, hauling the
+    directory across the boundary per watcher.
+    ``fanout=True``: every watcher subscribes on its cluster's replica
+    (``agent.watch_local``); the ONE shipped delta envelope per cluster per
+    sweep feeds all of them, so notify bytes are O(1) in the watcher count
+    — the cross-boundary cost of N watchers equals that of zero. The feed is
+    scoped to the watched vocabulary (``/queues/`` plus ``/clusters/``
+    membership) so the watch plane is charged only for what the observers
+    subscribe to — the locality block measures the full default feed.
+    """
+    plane = ManagementPlane(message_log_limit=0, op_log_limit=1_000,
+                            coalesce_watches=True, replica_fanout=fanout,
+                            replica_prefixes=("/clusters/", "/queues/"))
+    plane.add_cluster("master", is_master=True)
+    for i in range(n_clusters - 1):
+        plane.add_cluster(f"c{i}")
+    ow = plane.agents["master"].ow
+    for k in range(LOCALITY_QUEUES):
+        ow.put(f"/queues/fam{k}", {"ready": 10 * (k + 1), "inflight": k,
+                                   "clock": 0.0})
+    plane.tick(n=2)                      # settle; first ships land
+    fabric = plane.fabric
+    agents = [plane.agents[f"c{i}"] for i in range(n_clusters - 1)]
+    delivered = [0]
+    if fanout:
+        def observe(events):
+            delivered[0] += len(events)
+        for agent in agents:
+            for _ in range(watchers):
+                agent.watch_local("/queues/", observe, batch=True)
+    base_cross = fabric.cross_cluster_bytes()
+    base_ships = dict(plane.shipper.stats) if fanout else {}
+    for t in range(ticks):
+        for k in range(LOCALITY_QUEUES):     # every watched row churns
+            ow.put(f"/queues/fam{k}", {"ready": 10 * (k + 1) + t + 1,
+                                       "inflight": k, "clock": float(t)})
+        plane.tick()
+        if not fanout:
+            for agent in agents:
+                for _ in range(watchers):
+                    items = agent.ow.range_stale("/queues/", max_lag=2.0)
+                    delivered[0] += len(items)
+    cross = fabric.cross_cluster_bytes() - base_cross
+    events = delivered[0]
+    row = {"clusters": n_clusters, "watchers_per_cluster": watchers,
+           "events_delivered": events, "cross_bytes": cross,
+           "cross_bytes_per_event": cross / max(events, 1)}
+    if fanout:
+        row["replica_ships"] = {k: v - base_ships.get(k, 0)
+                                for k, v in plane.shipper.stats.items()}
+        # subscribed watchers never read across the boundary at all — any
+        # fallback here means the notify plane silently degraded to polling
+        fallbacks = fabric.stats["fallback_reads"]
+        row["fallback_reads"] = fallbacks
+        row["ok"] = fallbacks == 0
+    return row
+
+
+def run_notify(scales=LOCALITY_SCALES) -> dict:
+    """Per-watcher round trips vs the replica-fed watch plane at each scale.
+
+    The ``gains`` entries (HIGHER is better, guarded by ``make bench-check``
+    and the CI ``control_plane:notify`` gate) are the cross-boundary
+    bytes-per-event reduction factors; the watch plane's acceptance bar is
+    >= 5x at the 64- and 256-cluster points. The smallest scale also runs
+    the fan-out side with ONE watcher per cluster: identical shipped bytes
+    at 1 and ``NOTIFY_WATCHERS`` watchers is the recorded O(1)-in-watchers
+    evidence (exact equality is asserted by tests/test_locality.py).
+    """
+    key = ("notify", tuple(scales))
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    rows = []
+    gains = {}
+    for n in scales:
+        baseline = bench_notify_point(n, fanout=False)
+        fanout = bench_notify_point(n, fanout=True)
+        reduction = (baseline["cross_bytes_per_event"]
+                     / max(fanout["cross_bytes_per_event"], 1e-9))
+        row = {"clusters": n, "baseline": baseline, "fanout": fanout,
+               "cross_bytes_per_event_reduction": reduction}
+        if n == min(scales):
+            one = bench_notify_point(n, fanout=True, watchers=1)
+            row["fanout_single_watcher_cross_bytes"] = one["cross_bytes"]
+        rows.append(row)
+        gains[f"notify_bytes_per_event_reduction_{n}"] = reduction
+    result = {"label": "remote /queues/ watchers: per-watcher round trips "
+                       "vs replica-fed watch plane",
+              "watchers_per_cluster": NOTIFY_WATCHERS,
+              "ticks": LOCALITY_TICKS, "rows": rows, "gains": gains}
+    _SWEEP_CACHE[key] = result
+    return result
+
+
+def run_json_notify() -> dict:
+    """The notify block alone — the deterministic CI gate's entry point
+    (``benchmarks.check control_plane:notify``), no wall-clock sweeps."""
+    return run_notify()
 
 
 # ----------------------------------------------------------- recovery storm
@@ -467,6 +596,14 @@ def run() -> List[tuple]:
                      r["fanout"]["cross_bytes_per_read"]))
         rows.append((f"locality_reduction{tag}",
                      r["cross_bytes_per_read_reduction"]))
+    for r in run_notify()["rows"]:
+        tag = f"[{r['clusters']}cl]"
+        rows.append((f"notify_bytes_per_event_baseline{tag}",
+                     r["baseline"]["cross_bytes_per_event"]))
+        rows.append((f"notify_bytes_per_event_fanout{tag}",
+                     r["fanout"]["cross_bytes_per_event"]))
+        rows.append((f"notify_reduction{tag}",
+                     r["cross_bytes_per_event_reduction"]))
     rows += bench_configuration_phase(8, 4)
     rows += bench_configuration_phase(32, 4)
     rows += bench_failure_recovery()
@@ -479,6 +616,7 @@ def run_json() -> dict:
             "after_sharded": run_sharded_sweep(),
             "storm": bench_recovery_storm(),
             "locality": run_locality(),
+            "notify": run_notify(),
             "ops": [{"name": n, "us_per_call": v}
                     for n, v in bench_plane_ops(8)],
             "recovery": dict(bench_failure_recovery())}

@@ -33,8 +33,11 @@ placements, statuses — is a watch-materialized dispatcher view, i.e.
 master-LOCAL state maintained from the overwatch event stream; an inventory
 sync never issues a cross-boundary round-trip. The published
 ``/autoscale/<family>`` state rides the replica fan-out (it is in
-``REPLICA_PREFIXES``), so remote observers watch fleet trajectories off
-their cluster-local replica at zero per-read cross-boundary cost too.
+``REPLICA_PREFIXES``): remote observers READ fleet trajectories off their
+cluster-local replica (``agent.fleet_states()``) and — the notify half —
+SUBSCRIBE to them with :meth:`Reconciler.fleet_watch` / a ``ReplicaView``
+over ``/autoscale/``, fed by the one shipped envelope per sweep; N observers
+on a cluster cost the cross-boundary bytes of zero.
 """
 from __future__ import annotations
 
@@ -377,6 +380,17 @@ class Reconciler:
         self._last_published[family] = state
         self.plane.master_agent.ow.put(f"/autoscale/{family}",
                                        {**state, "clock": now})
+
+    @staticmethod
+    def fleet_watch(agent, family: str, cb):
+        """Subscribe a remote fleet-state observer on ``agent``'s cluster:
+        ``cb(event, key, value, rev)`` fires for every published change to
+        ``/autoscale/<family>`` off the cluster-local replica feed — the
+        observer never dials the master, and any number of observers share
+        the one shipped envelope per sweep. Raises on a cluster without a
+        replica (fan-out off): there is deliberately NO silent cross-boundary
+        fallback for subscriptions, only for reads."""
+        return agent.watch_local(f"/autoscale/{family}", cb)
 
     def replicas(self, family: str) -> int:
         return sum(1 for r in self.pods[family].values()

@@ -14,6 +14,15 @@ Responsibilities, mapped 1:1 from the paper:
     ``range_stale`` reads (``fleet_telemetry``/``queue_depths`` below, worker
     depth gates, any telemetry consumer on this cluster) from local state —
     zero cross-boundary bytes per read while the ships keep it within bound.
+  * cluster-local read service (the watch-plane overhaul) — the replica is
+    also exposed as a service endpoint on ``REPLICA_PORT`` (``range_stale``
+    + ``watch``/``watch_batch``) so worker pods, depth views, and autoscale
+    observers on this cluster subscribe HERE instead of dialing the master:
+    every watcher is fed from the one shipped envelope per sweep
+    (``LocalReplica.watch``), so N watchers cost the cross-boundary bytes of
+    zero. ``watch_local``/``local_view`` are the in-process fast path to the
+    same plane; reads past the staleness bound transparently fall back to
+    the primary (counted in ``fabric.stats["fallback_reads"]``).
 
 The agent is an ordinary fabric endpoint: everything it says to the master-hosted
 overwatch crosses the thin boundary and is byte-accounted. A partitioned cluster
@@ -31,6 +40,7 @@ from repro.core.service_graph import AppSpec
 from repro.core.transport import Address, DeliveryError, Envelope, Fabric
 
 AGENT_PORT = 6000
+REPLICA_PORT = 6001           # the cluster-local read service (replica-fed)
 AGENT_IP_SUFFIX = "0.20"
 OW_TUNNEL_RANK = 9_999        # reserved gateway rank for the overwatch tunnel
 
@@ -65,6 +75,8 @@ class ControlAgent:
         fabric.register_handler(cluster, self.addr, self._handle)
         self.ow: Optional[OverwatchClient] = None
         self.replica = None                  # LocalReplica (fan-out mode)
+        self.replica_addr: Optional[Address] = None   # read-service endpoint
+        self._views: Dict[str, Any] = {}     # prefix -> cached ReplicaView
         # telemetry envelope size is shape-constant (fixed keys, numeric
         # values): computed on the first heartbeat, reused forever after so
         # the fabric's byte accounting never re-walks the hottest message
@@ -119,12 +131,67 @@ class ControlAgent:
         """Host a cluster-local overwatch replica (fan-out mode): shipped
         ``replica_batch`` deltas land here, and this agent's overwatch client
         serves in-bound ``range_stale`` reads from it without touching the
-        fabric. Returns the replica (the shipper registers it master-side)."""
+        fabric. Also registers the cluster-local read service on
+        ``REPLICA_PORT`` so local pods consume the replica (reads + watches)
+        as an ordinary service endpoint. Returns the replica (the shipper
+        registers it master-side)."""
         from repro.core.replica import REPLICA_PREFIXES, LocalReplica
         self.replica = LocalReplica(prefixes or REPLICA_PREFIXES)
         if self.ow is not None:
             self.ow.replica = self.replica
+        self.replica_addr = (self.addr[0], REPLICA_PORT)
+        self.fabric.register_handler(self.cluster, self.replica_addr,
+                                     self._handle_replica_service)
         return self.replica
+
+    # ------------------------------------------------- cluster-local read service
+    def _handle_replica_service(self, msg: dict) -> dict:
+        """The replica as a service endpoint for pods on THIS cluster: a
+        ``range_stale`` answered from local state (primary fallback past the
+        staleness bound, exactly like the in-process client path), and watch
+        registration onto the replica-fed notify plane. Watch callbacks are
+        in-process references — the simulated fabric's stand-in for a
+        streaming subscription; what the byte ledger sees is the honest
+        part: registering and feeding N watchers costs zero cross-boundary
+        traffic."""
+        op = msg.get("op")
+        if op == "range_stale":
+            items = self.ow.range_stale(msg["prefix"],
+                                        msg.get("max_lag", 2.0))
+            return {"ok": True, "items": items}
+        if op in ("watch", "watch_batch"):
+            try:
+                self.watch_local(msg["prefix"], msg["cb"],
+                                 batch=(op == "watch_batch"))
+            except (RuntimeError, ValueError) as e:
+                return {"ok": False, "error": str(e)}
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown op {op}"}
+
+    def watch_local(self, prefix: str, cb, batch: bool = False):
+        """Subscribe to shipped deltas under ``prefix`` on this cluster's
+        replica — the notify half of the local read service. Revision-ordered
+        and coalesced exactly like the primary's watch buckets, fed from the
+        one envelope per sweep: no per-watcher cross-boundary traffic."""
+        if self.replica is None:
+            raise RuntimeError(
+                f"cluster {self.cluster} hosts no replica (fan-out off)")
+        if batch:
+            return self.replica.watch_batch(prefix, cb)
+        return self.replica.watch(prefix, cb)
+
+    def local_view(self, prefix: str):
+        """A cached watch-materialized ``ReplicaView`` over ``prefix`` — the
+        cluster-local twin of the dispatcher's master-side views (worker
+        depth gates, fleet-state observers)."""
+        if self.replica is None:
+            raise RuntimeError(
+                f"cluster {self.cluster} hosts no replica (fan-out off)")
+        view = self._views.get(prefix)
+        if view is None:
+            from repro.core.replica import ReplicaView
+            view = self._views[prefix] = ReplicaView(self.replica, prefix)
+        return view
 
     def register(self) -> None:
         """Lease-backed registration (overwatch = discovery + failure detection)."""
@@ -145,6 +212,14 @@ class ControlAgent:
             GW.add_dns_entry(self.state, spec, s)
             GW.reserve_route(self.fabric, self.state, spec, s)
             GW.set_access_control(self.state, spec, s)
+        if self.replica_addr is not None:
+            # the cluster-local read service is default-deny like any other
+            # service: rebuilt from scratch on every (re-)broadcast so only
+            # the pods CURRENTLY partitioned onto this cluster may dial it
+            self.state.acl.block_all(self.replica_addr)
+            for pod, cl in spec.partition.items():
+                if cl == self.cluster:
+                    self.state.acl.allow(pod, self.replica_addr)
         GW.install_acl(self.fabric, self.state)
         if self.cluster != self.master:
             for s in svc_names:
@@ -262,6 +337,13 @@ class ControlAgent:
         check, local under fan-out like ``fleet_telemetry``."""
         items = self.ow.range_stale("/queues/", max_lag=max_lag)
         return {k[len("/queues/"):]: v for k, v in items.items()}
+
+    def fleet_states(self, max_lag: float = 2.0) -> Dict[str, dict]:
+        """Published ``/autoscale/<family>`` fleet state — the remote
+        autoscale observer's read surface, local under fan-out; pair with
+        ``watch_local("/autoscale/", cb)`` for the notify side."""
+        items = self.ow.range_stale("/autoscale/", max_lag=max_lag)
+        return {k[len("/autoscale/"):]: v for k, v in items.items()}
 
     def _report_job(self, jid: str) -> None:
         rec = self.jobs[jid]

@@ -962,11 +962,15 @@ class OverwatchClient:
     def range_stale(self, prefix: str, max_lag: float) -> Dict[str, Any]:
         """Bounded-staleness range (telemetry path): the local per-cluster
         replica when it covers the prefix within ``max_lag``, else the
-        primary's read replica over the fabric."""
+        primary's read replica over the fabric. A read that had a covering
+        replica but found it out of bound (ships stopped) is counted in
+        ``fabric.stats["fallback_reads"]`` — the locality benchmark asserts
+        these stay rare instead of letting them hide in total cross-bytes."""
         rep = self.replica
-        if (rep is not None and rep.covers(prefix)
-                and rep.lag(self.fabric.clock) <= max_lag):
-            return rep.range_items(prefix)
+        if rep is not None and rep.covers(prefix):
+            if rep.lag(self.fabric.clock) <= max_lag:
+                return rep.range_items(prefix)
+            self.fabric.stats["fallback_reads"] += 1
         return self._call({"op": "range_stale", "prefix": prefix,
                            "max_lag": max_lag})["items"]
 

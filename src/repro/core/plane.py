@@ -213,9 +213,14 @@ class ManagementPlane:
                     applied = int(resp.get("rev", 0))
                 except (DeliveryError, KeyError):
                     # unreachable (partitioned) or not yet re-registered:
-                    # bootstrap-seed the feed; ships fail harmlessly until
-                    # the cluster heals or its lease tombstones it
-                    self.shipper.register(name)
+                    # bootstrap-seed the feed with a RESET marker — the
+                    # replica's horizon is unknowable and its snapshot may
+                    # hold keys whose deletion the fresh seed cannot
+                    # tombstone; ships fail harmlessly until the cluster
+                    # heals or its lease tombstones it, and the first ship
+                    # after heal re-converges the replica (and its watchers,
+                    # deletions included) from scratch
+                    self.shipper.register(name, reset=True)
                     continue
                 self.shipper.register_resume(name, applied, tail, tail_base)
         # a cluster whose registration (lease grant + /clusters/ put) was
@@ -264,6 +269,7 @@ class ManagementPlane:
             "local_bytes": sum(f.local_bytes.values()),
             "locality_ratio": f.locality_ratio(),
             "per_edge": dict(f.cross_bytes),
+            "fabric_stats": dict(f.stats),
         }
         if self.shipper is not None:
             out["replica_ships"] = dict(self.shipper.stats)

@@ -204,6 +204,10 @@ class Fabric:
         self._acl: Dict[str, "AclTable"] = {}
         self.local_bytes: Counter = Counter()    # per-cluster intra bytes
         self.cross_bytes: Counter = Counter()    # per (src, dst) cluster pair
+        # named operational counters the byte ledgers can't express — e.g.
+        # ``fallback_reads``: bounded-staleness reads that had to abandon an
+        # out-of-bound local replica for a primary round trip
+        self.stats: Counter = Counter()
         self.message_log: RingLog = RingLog(message_log_limit)
         self._timers: List[Tuple[float, int, Callable]] = []   # real min-heap
         self._timer_seq = itertools.count()      # FIFO tie-break at one deadline

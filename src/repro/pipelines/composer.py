@@ -32,8 +32,10 @@ scheduler and every worker routing each queue's ops to its owning shard —
 disjoint families stop serializing through one handler. One shard keeps the
 single historic ``"broker"`` service and is behavior-identical.
 ``depth_gated_workers=True`` (needs the plane's replica fan-out) lets remote
-workers consult their cluster-local ``/queues/`` replica view and skip the
-cross-boundary ``pull_many`` for queues the local snapshot shows empty.
+workers consult their cluster's watch-materialized ``/queues/`` view — fed by
+the replica notify plane, one shipped envelope per sweep however many workers
+subscribe — and skip the cross-boundary ``pull_many`` for queues the local
+view shows empty.
 
 ``pipelined=True`` (default) runs the batched data plane end to end: the
 scheduler coalesces each tick's frontier into one ``upsert_many`` plus one
@@ -194,20 +196,24 @@ class HybridComposer:
 
     def _depth_hint_for(self, agent):
         """The worker depth gate: believed ready depth off the hosting
-        cluster's local replica. None (always pull) when gating is off, the
-        worker is master-local (its pulls never cross the boundary), or the
-        cluster hosts no replica. An out-of-bound replica reports "unknown"
-        (pull) rather than a confidently wrong zero."""
+        cluster's watch-materialized ``/queues/`` view (``agent.local_view``)
+        — maintained purely from the replica-fed notify plane, never a
+        per-call probe. None (always pull) when gating is off, the worker is
+        master-local (its pulls never cross the boundary), or the cluster
+        hosts no replica. An out-of-bound replica reports "unknown" (pull)
+        rather than a confidently wrong zero — the same transparent
+        primary-fallback contract as ``range_stale``."""
         if (not self.depth_gated_workers or agent.replica is None
                 or agent.cluster == self.plane.master):
             return None
         replica, fabric = agent.replica, self.plane.fabric
+        view = agent.local_view("/queues/")
         max_lag = self.depth_gate_max_lag
 
         def hint(queue: str) -> int:
             if replica.lag(fabric.clock) > max_lag:
                 return 1                     # unknown: fall back to pulling
-            row = replica.get(f"/queues/{queue}")
+            row = view.get(f"/queues/{queue}")
             return int((row or {}).get("ready", 0))
 
         return hint

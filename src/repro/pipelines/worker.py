@@ -26,10 +26,12 @@ seed's per-task path for equivalence tests and the benchmark baseline).
 Cross-boundary locality (the traffic overhaul): ``broker_for`` routes each
 queue's ops to its owning broker shard's service (``BrokerRouter`` — one
 ``ack_many`` per shard that leased work, still one RPC total when unsharded),
-and an optional ``depth_hint`` (the cluster-local overwatch replica's
-``/queues/<name>`` view) skips the ``pull_many`` round-trip entirely for
-queues the local snapshot shows empty — a remote worker polling idle queues
-stops paying a cross-boundary RPC per queue per tick. A stale-zero hint only
+and an optional ``depth_hint`` (the cluster-local, watch-materialized
+``/queues/<name>`` view — maintained by the replica-fed notify plane, so any
+number of workers share one shipped envelope per sweep) skips the
+``pull_many`` round-trip entirely for queues the local view shows empty — a
+remote worker polling idle queues stops paying a cross-boundary RPC per
+queue per tick. A stale-zero hint only
 delays the pull by the replica's staleness bound; a stale-positive hint costs
 one empty pull — both degrade to the ungated protocol.
 

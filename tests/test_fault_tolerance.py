@@ -231,3 +231,128 @@ def test_chaos_seeded_plans_are_reproducible():
         [p.at_op for p in plan_b.points]
     assert [p.at_op for p in FaultPlan.seeded(8).points] != \
         [p.at_op for p in plan_a.points]
+
+
+# =====================================================================
+# Watch-over-replica crash recovery: remote watchers fed by the shipped
+# envelopes must see every state transition EXACTLY once across a master
+# crash — resumed feeds deliver no duplicates, reset-seeded feeds
+# resynthesize the diff (tombstones included) instead of replaying the
+# world.
+# =====================================================================
+
+
+def _watch_plane():
+    dur = LogStore()
+    plane = ManagementPlane(durability=dur, replica_fanout=True)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("c0", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.tick(n=2)                          # bootstrap seed ships + acks
+    return plane, dur
+
+
+def _crash_and_recover(plane, dur, downtime=2):
+    dur.lose_uncommitted()
+    plane.fabric.partition_cluster(plane.master)
+    for _ in range(downtime):
+        plane.fabric.tick(1.0)
+    return plane.recover_global_plane()
+
+
+def test_watchers_see_no_gap_or_dup_across_resumed_recovery():
+    """Reachable replica at recovery: the rebuilt shipper resumes the feed
+    from the replica's horizon — the watcher's event stream is seamless."""
+    plane, dur = _watch_plane()
+    agent = plane.agents["c0"]
+    seen = []
+    agent.watch_local("/queues/", lambda e, k, v, r: seen.append((e, k, r)))
+    plane.overwatch.handle({"op": "put", "key": "/queues/a",
+                            "value": {"ready": 1, "inflight": 0}})
+    plane.tick()                             # shipped + group-committed
+    _crash_and_recover(plane, dur)
+    assert agent.replica.stats["resets"] == 0   # resumed, not reseeded
+    plane.overwatch.handle({"op": "put", "key": "/queues/b",
+                            "value": {"ready": 2, "inflight": 0}})
+    plane.tick(n=2)
+    q_events = [(e, k) for e, k, _ in seen if k.startswith("/queues/")]
+    assert q_events == [("put", "/queues/a"), ("put", "/queues/b")]
+    revs = [r for _, _, r in seen]
+    assert revs == sorted(revs)
+
+
+def test_partitioned_watcher_gets_tombstones_via_reset_seed():
+    """Unreachable replica at recovery: the feed is reseeded with a reset
+    marker, and the first envelope after heal delivers the DIFF — a
+    tombstone for the key deleted during the outage, one put for the new
+    key, silence for the key the watcher already holds."""
+    plane, dur = _watch_plane()
+    agent = plane.agents["c0"]
+    plane.overwatch.handle({"op": "put", "key": "/queues/keep",
+                            "value": {"ready": 1, "inflight": 0}})
+    plane.overwatch.handle({"op": "put", "key": "/queues/doomed",
+                            "value": {"ready": 2, "inflight": 0}})
+    plane.tick(n=2)
+    seen = []
+    agent.watch_local("/queues/", lambda e, k, v, r: seen.append((e, k)))
+    plane.fabric.partition_cluster("c0")     # ships can no longer land
+    plane.overwatch.handle({"op": "delete", "key": "/queues/doomed"})
+    plane.overwatch.handle({"op": "put", "key": "/queues/new",
+                            "value": {"ready": 3, "inflight": 0}})
+    plane.tick()
+    _crash_and_recover(plane, dur)
+    assert plane.shipper._feeds["c0"].reset  # unreachable -> reset seed
+    plane.fabric.heal_cluster("c0")
+    plane.tick(n=2)
+    assert agent.replica.stats["resets"] == 1
+    q = [ev for ev in seen if ev[1].startswith("/queues/")]
+    assert ("delete", "/queues/doomed") in q
+    assert ("put", "/queues/new") in q
+    assert not any(k == "/queues/keep" for _, k in q)
+    assert len(q) == 2                       # exactly the diff, once
+    assert agent.replica.get("/queues/doomed") is None
+    # and the view the composer gates on agrees with the primary
+    assert agent.local_view("/queues/").items() == \
+        plane.overwatch.handle({"op": "range", "prefix": "/queues/"})["items"]
+
+
+def test_replica_ahead_of_lossy_recovery_forces_reset():
+    """A shipped-but-uncommitted write leaves the replica AHEAD of the
+    recovered store; rev-based dedupe would silently eat legitimate events
+    forever, so the shipper must detect it and reseed with a reset — the
+    watcher sees the store revert exactly once."""
+    plane, dur = _watch_plane()
+    agent = plane.agents["c0"]
+    plane.overwatch.handle({"op": "put", "key": "/queues/x",
+                            "value": {"ready": 1, "inflight": 0}})
+    plane.tick()                             # committed + shipped
+    seen = []
+    agent.watch_local("/queues/", lambda e, k, v, r: seen.append((e, k, v)))
+    plane.overwatch.handle({"op": "put", "key": "/queues/x",
+                            "value": {"ready": 9, "inflight": 0}})
+    plane.shipper.ship_all()                 # shipped WITHOUT group commit
+    assert agent.replica.get("/queues/x")["ready"] == 9
+    _crash_and_recover(plane, dur)           # the v=9 record evaporates
+    plane.tick(n=2)
+    assert agent.replica.stats["resets"] == 1
+    # the revert landed as ONE put, and the replica matches the store again
+    xs = [v for _, k, v in seen if k == "/queues/x"]
+    assert xs == [{"ready": 9, "inflight": 0}, {"ready": 1, "inflight": 0}]
+    assert agent.replica.get("/queues/x")["ready"] == 1
+
+
+def test_chaos_watcher_stream_consistent_after_triple_crash():
+    """End-to-end: a depth watcher riding the chaos pipeline never sees a
+    revision go backwards and converges to the primary after three crashes."""
+    plane, comp, executed = _chaos_pipeline(300, fanout=True)
+    agent = plane.agents["onprem-a"]
+    revs = []
+    agent.watch_local("/queues/", lambda e, k, v, r: revs.append(r))
+    h = ChaosHarness(plane, comp, FaultPlan.crash_at_ops(40, 90, 150),
+                     downtime_ticks=2)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    assert h.crashes == 3
+    _assert_exactly_once(executed, 300)
+    assert revs and revs == sorted(revs)
+    assert agent.local_view("/queues/").items() == \
+        plane.overwatch.handle({"op": "range", "prefix": "/queues/"})["items"]

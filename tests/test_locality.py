@@ -281,3 +281,247 @@ def test_partitioned_send_still_raises():
     fabric.partition_cluster("c")
     with pytest.raises(DeliveryError):
         fabric.send("c", "pod", "c", ("ip", 1), {"x": 1})
+
+
+# ------------------------------------------------------- replica watch plane
+def test_replica_watch_delivers_shipped_events_in_revision_order():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    seen, batches = [], []
+    agent.watch_local("/queues/", lambda e, k, v, r: seen.append((e, k, r)))
+    agent.watch_local("/queues/", batches.append, batch=True)
+    for k in range(3):
+        plane.overwatch.handle({"op": "put", "key": f"/queues/q{k}",
+                                "value": {"ready": k, "inflight": 0}})
+    plane.tick()
+    plane.overwatch.handle({"op": "delete", "key": "/queues/q1"})
+    plane.tick()
+    assert [e for e, _, _ in seen] == ["put", "put", "put", "delete"]
+    assert [k for _, k, _ in seen] == ["/queues/q0", "/queues/q1",
+                                      "/queues/q2", "/queues/q1"]
+    revs = [r for _, _, r in seen]
+    assert revs == sorted(revs)
+    # the batch subscriber saw the same events, coalesced per sweep
+    assert [len(b) for b in batches] == [3, 1]
+    # a prefix outside the shipped set is refused loudly, not silently dead
+    with pytest.raises(ValueError):
+        agent.watch_local("/jobs/", lambda *a: None)
+
+
+def test_n_watchers_cost_the_same_cross_bytes_as_zero():
+    """The tentpole claim, ledger-verified: feeding 8 watchers per cluster
+    is byte-identical to feeding none — the one shipped envelope per sweep
+    IS the notify path."""
+    def run(watchers):
+        plane = _fanout_plane()
+        delivered = [0]
+        if watchers:
+            for name in ("c0", "c1"):
+                for _ in range(watchers):
+                    plane.agents[name].watch_local(
+                        "/queues/",
+                        lambda evs: delivered.__setitem__(
+                            0, delivered[0] + len(evs)),
+                        batch=True)
+        base = plane.fabric.cross_cluster_bytes()
+        for t in range(4):
+            plane.overwatch.handle({"op": "put", "key": "/queues/hot",
+                                    "value": {"ready": t, "inflight": 0}})
+            plane.tick()
+        return plane.fabric.cross_cluster_bytes() - base, delivered[0]
+
+    bytes_zero, _ = run(0)
+    bytes_eight, delivered = run(8)
+    assert bytes_eight == bytes_zero
+    assert delivered == 2 * 8 * 4        # every watcher saw every churn
+
+
+def test_watch_dedupes_cumulative_redelivery():
+    """Exactly-once notify: re-applying an envelope whose ack was lost
+    re-converges the snapshot but never re-fires watchers."""
+    rep = LocalReplica(REPLICA_PREFIXES)
+    seen = []
+    rep.watch("/queues/", lambda e, k, v, r: seen.append((e, k, r)))
+    batch = {"events": [("put", "/queues/a", {"ready": 1}, 5),
+                        ("delete", "/queues/b", None, 6)],
+             "rev": 6, "clock": 1.0}
+    rep.apply_ship(batch)
+    rep.apply_ship(dict(batch, clock=2.0))           # redelivered verbatim
+    assert seen == [("put", "/queues/a", 5), ("delete", "/queues/b", 6)]
+    # genuinely new events still flow
+    rep.apply_ship({"events": [("put", "/queues/a", {"ready": 2}, 7)],
+                    "rev": 7, "clock": 3.0})
+    assert seen[-1] == ("put", "/queues/a", 7) and len(seen) == 3
+
+
+def test_watcher_queue_is_bounded_and_raising_callback_retries():
+    """Satellite: a stuck callback keeps (bounded) state, not unbounded
+    memory — RingLog discipline with a drop counter in stats — and a
+    callback that heals gets the retained events on the next ship."""
+    rep = LocalReplica(REPLICA_PREFIXES, watch_queue_limit=4)
+    delivered, broken = [], [True]
+
+    def cb(e, k, v, r):
+        if broken[0]:
+            raise RuntimeError("stuck")
+        delivered.append((e, k, r))
+
+    w = rep.watch("/queues/", cb)
+    for i in range(10):
+        rep.apply_ship({"events": [("put", f"/queues/q{i}", {"r": i}, i + 1)],
+                        "rev": i + 1, "clock": float(i)})
+    assert len(w.pending) == 4                       # capped, not 10
+    assert w.dropped == 6
+    assert rep.stats["watch_dropped"] == 6
+    assert rep.stats["watch_errors"] > 0
+    broken[0] = False
+    # an empty freshness beacon drains the retained queue
+    rep.apply_ship({"events": [], "rev": 10, "clock": 10.0})
+    assert [k for _, k, _ in delivered] == [f"/queues/q{i}"
+                                            for i in range(6, 10)]
+    assert not w.pending
+
+
+def test_reset_batch_diffs_against_snapshot_tombstones_included():
+    """Crash-recovery replay: a reset batch must resynthesize watcher state
+    — a tombstone for the key deleted during the gap, a put only for the key
+    that changed, SILENCE for the key the watcher already holds."""
+    rep = LocalReplica(REPLICA_PREFIXES)
+    rep.apply_ship({"events": [("put", "/queues/keep", {"ready": 1}, 1),
+                               ("put", "/queues/gone", {"ready": 2}, 2),
+                               ("put", "/queues/chg", {"ready": 3}, 3)],
+                    "rev": 3, "clock": 1.0})
+    seen = []
+    rep.watch("/queues/", lambda e, k, v, r: seen.append((e, k, v)))
+    rep.apply_ship({"events": [("put", "/queues/keep", {"ready": 1}, 10),
+                               ("put", "/queues/chg", {"ready": 9}, 11),
+                               ("put", "/queues/new", {"ready": 4}, 12)],
+                    "rev": 12, "clock": 5.0, "reset": True})
+    assert ("delete", "/queues/gone", None) in seen
+    assert ("put", "/queues/chg", {"ready": 9}) in seen
+    assert ("put", "/queues/new", {"ready": 4}) in seen
+    assert not any(k == "/queues/keep" for _, k, _ in seen)   # no duplicate
+    assert len(seen) == 3
+    assert rep.get("/queues/gone") is None
+    assert rep.stats["resets"] == 1
+
+
+def test_duplicate_register_keeps_horizon_and_never_reships_seed():
+    """Satellite regression (the retry race): a duplicate register for a
+    live feed — an agent retrying after a timed-out ack — must neither
+    re-ship the bootstrap seed nor reset the cumulative-ack horizon."""
+    plane = _fanout_plane()
+    feed = plane.shipper._feeds["c0"]
+    horizon = feed.acked_rev
+    assert not feed.seed                 # bootstrap already confirmed
+    events_before = plane.agents["c0"].replica.stats["events"]
+    plane.shipper.register("c0")         # the retry
+    assert plane.shipper.stats["duplicate_registers"] == 1
+    assert plane.shipper._feeds["c0"] is feed
+    assert feed.acked_rev == horizon and not feed.seed and not feed.reset
+    plane.tick()
+    # the next ship carried only churn (telemetry beacons), not a re-seed
+    # of the whole directory: the replica saw no snapshot-sized event burst
+    assert (plane.agents["c0"].replica.stats["events"]
+            - events_before) <= 2 * len(plane.agents)
+
+
+def test_cluster_local_read_service_endpoint():
+    """The replica as a service endpoint: pods dial their OWN agent's
+    REPLICA_PORT for reads and watch registration — zero cross-boundary
+    bytes for both."""
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    plane.overwatch.handle({"op": "put", "key": "/queues/svc-q",
+                            "value": {"ready": 5, "inflight": 0}})
+    plane.tick()
+    before = plane.fabric.cross_cluster_bytes()
+    resp = plane.fabric.send("c0", "w0", "c0", agent.replica_addr,
+                             {"op": "range_stale", "prefix": "/queues/",
+                              "max_lag": 2.0})
+    assert resp["ok"] and resp["items"]["/queues/svc-q"]["ready"] == 5
+    got = []
+    resp = plane.fabric.send("c0", "w0", "c0", agent.replica_addr,
+                             {"op": "watch_batch", "prefix": "/queues/",
+                              "cb": got.append})
+    assert resp["ok"]
+    assert plane.fabric.cross_cluster_bytes() == before   # all local
+    plane.overwatch.handle({"op": "put", "key": "/queues/svc-q",
+                            "value": {"ready": 6, "inflight": 0}})
+    plane.tick()
+    assert any(k == "/queues/svc-q" for _, k, _, _ in got[-1])
+    # unknown ops are refused, not crashed
+    assert not plane.fabric.send("c0", "w0", "c0", agent.replica_addr,
+                                 {"op": "bogus"})["ok"]
+
+
+def test_fallback_reads_counted_separately():
+    """Satellite: a primary fallback past the staleness bound is a named
+    counter, not an anonymous byte blob."""
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    assert plane.fabric.stats["fallback_reads"] == 0
+    agent.queue_depths(max_lag=2.0)                  # replica-local
+    assert plane.fabric.stats["fallback_reads"] == 0
+    relay = plane.dispatcher._relays[("dispatch-relay", "c0")]
+    ch = plane.fabric.channel_at("master", relay)
+    plane.fabric.kill_channel(ch.channel_id)
+    plane.tick(n=4)                                  # replica goes stale
+    agent.queue_depths(max_lag=2.0)                  # forced primary trip
+    assert plane.fabric.stats["fallback_reads"] == 1
+    # an uncovered prefix is a deliberate primary read, NOT a fallback
+    agent.ow.range_stale("/jobs/", max_lag=100.0)
+    assert plane.fabric.stats["fallback_reads"] == 1
+
+
+def test_local_view_materializes_from_watch_plane():
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    view = agent.local_view("/queues/")
+    assert agent.local_view("/queues/") is view      # cached
+    plane.overwatch.handle({"op": "put", "key": "/queues/vq",
+                            "value": {"ready": 2, "inflight": 0}})
+    plane.tick()
+    assert view.get("/queues/vq")["ready"] == 2
+    assert view.fresh(plane.fabric.clock, 2.0)
+    plane.overwatch.handle({"op": "delete", "key": "/queues/vq"})
+    plane.tick()
+    assert view.get("/queues/vq") is None
+    # the view always mirrors the primary directory exactly
+    primary = plane.overwatch.handle(
+        {"op": "range", "prefix": "/queues/"})["items"]
+    assert view.items() == primary
+
+
+def test_fleet_watch_observes_autoscale_state_locally():
+    from repro.autoscale.reconciler import Reconciler
+    plane = _fanout_plane()
+    agent = plane.agents["c0"]
+    seen = []
+    Reconciler.fleet_watch(agent, "f", lambda e, k, v, r: seen.append(v))
+    plane.overwatch.handle({"op": "put", "key": "/autoscale/f",
+                            "value": {"desired": 3, "replicas": 1}})
+    before = plane.fabric.cross_cluster_bytes()
+    ships_before = plane.shipper.stats["shipped_bytes"]
+    plane.tick()
+    shipped = plane.shipper.stats["shipped_bytes"] - ships_before
+    assert seen and seen[-1]["desired"] == 3
+    assert agent.fleet_states(max_lag=2.0)["f"]["replicas"] == 1
+    # the only cross-boundary traffic carrying the observation is the ships
+    # (plus heartbeat chatter) — nothing per-observer
+    assert plane.fabric.cross_cluster_bytes() - before >= shipped > 0
+
+
+def test_notify_bench_reduction_clears_bar_and_is_o1_in_watchers():
+    """The notify gate pinned at the cheap 8-cluster point, plus the O(1)
+    evidence: shipped bytes at 1 and 8 watchers per cluster are EQUAL."""
+    from benchmarks.control_plane import bench_notify_point
+    baseline = bench_notify_point(8, fanout=False, ticks=4)
+    fanout = bench_notify_point(8, fanout=True, ticks=4)
+    assert baseline["events_delivered"] == fanout["events_delivered"] > 0
+    reduction = (baseline["cross_bytes_per_event"]
+                 / fanout["cross_bytes_per_event"])
+    assert reduction >= 5.0
+    one = bench_notify_point(8, fanout=True, ticks=4, watchers=1)
+    assert one["cross_bytes"] == fanout["cross_bytes"]
+    assert fanout["fallback_reads"] == 0 and fanout["ok"]
