@@ -12,7 +12,7 @@ test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale durability
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale durability workloads train_throughput kernels_bench
 
 # Full 50k-task chaos matrix (scripted master crashes, exactly-once
 # verdicts) — the human-readable face of the durability suite
@@ -36,5 +36,8 @@ bench-check:
 # durability:recovery re-runs the chaos matrix at a CI-sized task count and
 # gates hard zeros (lost/double-run tasks) plus the deterministic replay-
 # amplification ratio — record counts, host-independent
+# workloads:overhead gates the deterministic plane-RPCs-per-task count; the
+# suite's wall-clock gates (plane-overhead ratio, compiled-step-cache gain)
+# only run in the full `make bench-check`
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery workloads:overhead

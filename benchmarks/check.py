@@ -32,7 +32,8 @@ import sys
 import traceback
 from typing import Dict, List, Tuple
 
-GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability")
+GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability",
+                "workloads")
 TOLERANCE = 1.2          # a gated number may move 20% the wrong way
 
 

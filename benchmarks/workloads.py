@@ -1,0 +1,292 @@
+"""Workloads on the plane: what the hybrid pipeline plane costs (and buys)
+when the tasks are the real JAX train/serve workloads, not sim stubs.
+
+Four blocks, three acceptance gates (ISSUE 8):
+
+  * ``overhead``      — DETERMINISTIC: broker+taskdb RPCs per executed task
+    for a wide instant-handler DAG (the pure control-plane price of running
+    a task through scheduler -> broker -> worker -> taskdb). Host-independent
+    counts; this is the ``workloads:overhead`` part CI gates.
+  * ``overhead_wall`` — gate (a): wall-clock for a 4-stage same-family train
+    chain THROUGH the plane (warm compiled-step cache) vs one bare
+    ``Trainer.run()`` doing the identical total steps. Both sides pay one
+    model build + jit compile; the plane adds scheduling, queue hops and
+    taskdb commits. Gate: ratio <= 1.3x.
+  * ``cache``         — gate (b): wall-clock for a 12-stage same-family train
+    DAG, cold (``step_cache=0``: every task rebuilds + re-jits a Trainer —
+    the seed's behavior) vs warm (``step_cache=4``: one build, 11 rebinds).
+    Gate: >= 3x.
+  * ``placement``     — gate (c): makespan of a mixed compute/IO DAG over a
+    2-tier fleet (accel-tier + cheap-io-tier clusters), naive least-load
+    (``cost_aware=False``, every task in the shared default queue) vs
+    roofline-cost-aware steering (``cost_aware=True``: compute-bound tasks
+    ride the ``accel`` queue, IO-bound the ``cheap-io`` queue). Tasks carry
+    explicit cost vectors (the committed-artifact path); the makespan is
+    computed deterministically from the ACTUAL terminal taskdb placements
+    with a fixed service-time table (ticks per kind x tier), so the gain is
+    host-independent. Gate: >= 1.5x.
+
+Wall-clock blocks vary with the host; only ``make bench-check`` (full) gates
+them. The ``overhead`` block is deterministic and CI-gated via
+``workloads:overhead`` (see benchmarks/check.py's suite:part specs).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.pipelines import DAG, Task, HybridComposer
+
+# same-family train shape shared by every wall-clock block (reduced config:
+# the compile cost is real, the steps are CPU-sized)
+TRAIN_KW = dict(arch="qwen3-0.6b", seq_len=16, global_batch=2, mode="sync")
+CHAIN_STAGES = 4
+CHAIN_STEPS = 30
+CACHE_STAGES = 12
+CACHE_STEPS = 6
+
+OVERHEAD_TASKS = 512
+WORKER_BATCH = 64
+
+# placement sim: ticks one task occupies a worker, per kind x hosting tier
+SERVICE_TICKS = {"sim_train": {"accel": 1, "cheap-io": 6},
+                 "sim_etl": {"cheap-io": 1, "accel": 2}}
+# explicit cost vectors (the committed dry-run artifact path): intensity
+# 1000 flops/HBM-byte >> MACHINE_BALANCE -> compute-bound -> accel tier;
+# zero flops -> IO-bound -> cheap tier
+SIM_COSTS = {"sim_train": {"flops": 1e12, "hbm_bytes": 1e9},
+             "sim_etl": {"io_bytes": 1e9}}
+N_MIXED = 24                    # per kind; 48 tasks total
+PLACEMENT_BATCH = 2             # small pulls so naive spreads across the fleet
+
+
+def _train_plane() -> ManagementPlane:
+    plane = ManagementPlane(message_log_limit=1_000, op_log_limit=1_000)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("compute-a")
+    return plane
+
+
+def _chain(n: int, steps: int) -> DAG:
+    tasks = [Task(f"s{i}", kind="train",
+                  payload={**TRAIN_KW, "steps": steps},
+                  upstream=(f"s{i - 1}",) if i else ())
+             for i in range(n)]
+    return DAG("chain", tasks)
+
+
+# --------------------------------------------------------------- gate (a)
+def run_overhead_wall() -> dict:
+    """Plane-overhead ratio: a same-family train chain through the hybrid
+    plane (warm cache) vs one bare Trainer doing the identical step count."""
+    from repro.runtime.train_loop import Trainer, TrainJobConfig
+
+    t0 = time.perf_counter()
+    tr = Trainer(TrainJobConfig(steps=CHAIN_STAGES * CHAIN_STEPS, **TRAIN_KW))
+    tr.run()
+    bare = time.perf_counter() - t0
+
+    plane = _train_plane()
+    comp = HybridComposer(plane, workers={"compute-a": ["w0"]},
+                          worker_batch=WORKER_BATCH, step_cache=4)
+    comp.add_dag(_chain(CHAIN_STAGES, CHAIN_STEPS))
+    t0 = time.perf_counter()
+    ok = comp.run_dag("chain", max_ticks=CHAIN_STAGES * 4 + 100)
+    through_plane = time.perf_counter() - t0
+    ratio = through_plane / max(bare, 1e-9)
+    return {
+        "label": (f"{CHAIN_STAGES}-stage train chain through the plane vs "
+                  f"bare Trainer.run(), {CHAIN_STAGES * CHAIN_STEPS} steps"),
+        "bare_wall_s": bare, "plane_wall_s": through_plane,
+        "tasks": CHAIN_STAGES, "steps_per_task": CHAIN_STEPS,
+        "plane_overhead_ratio_raw": ratio,
+        "ok": bool(ok) and ratio <= 1.3,
+        # gate (a): <= 1.3. The GATED value floors at 1.0: a lucky sub-1.0
+        # measurement (compile-time jitter) must not tighten the committed
+        # baseline below what any honest re-run can meet — with the floor,
+        # bench-check's 1.2x tolerance gates fresh runs at ~the issue gate.
+        "flatness": {"plane_overhead_ratio": max(ratio, 1.0)},
+    }
+
+
+# --------------------------------------------------------------- gate (b)
+def _run_cache_dag(step_cache: int) -> dict:
+    plane = _train_plane()
+    comp = HybridComposer(plane, workers={"compute-a": ["w0"]},
+                          worker_batch=WORKER_BATCH, step_cache=step_cache)
+    comp.add_dag(_chain(CACHE_STAGES, CACHE_STEPS))
+    t0 = time.perf_counter()
+    ok = comp.run_dag("chain", max_ticks=CACHE_STAGES * 4 + 100)
+    wall = time.perf_counter() - t0
+    worker = comp.workers[0]
+    cache = worker._trainer_cache
+    return {"step_cache": step_cache, "ok": bool(ok), "wall_s": wall,
+            "cache_stats": cache.stats() if cache is not None else None}
+
+
+def run_cache() -> dict:
+    """Compiled-step cache gain on a 12-stage same-family DAG: cold rebuilds
+    (and re-jits) a Trainer per task; warm builds once and rebinds."""
+    cold = _run_cache_dag(step_cache=0)
+    warm = _run_cache_dag(step_cache=4)
+    gain = cold["wall_s"] / max(warm["wall_s"], 1e-9)
+    return {
+        "label": (f"{CACHE_STAGES}-stage same-family train DAG, "
+                  f"cold per-task builds vs warm compiled-step cache"),
+        "cold": cold, "warm": warm,
+        "ok": cold["ok"] and warm["ok"] and gain >= 3.0,
+        "gains": {"compiled_step_cache_gain": gain},    # gate (b): >= 3
+    }
+
+
+# --------------------------------------------------------------- gate (c)
+def _mixed_dag() -> DAG:
+    # interleaved so naive FIFO distribution hands every worker a mix
+    tasks = []
+    for i in range(N_MIXED):
+        tasks.append(Task(f"train{i}", kind="sim_train",
+                          cost=SIM_COSTS["sim_train"]))
+        tasks.append(Task(f"etl{i}", kind="sim_etl",
+                          cost=SIM_COSTS["sim_etl"]))
+    return DAG("mixed", tasks)
+
+
+def run_placement_fleet(cost_aware: bool) -> dict:
+    """One mixed-DAG execution over the 2-tier fleet; makespan is derived
+    from the terminal taskdb rows (which worker ran what) with the fixed
+    SERVICE_TICKS table — fully deterministic."""
+    plane = ManagementPlane(message_log_limit=1_000, op_log_limit=1_000)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("accel-a",
+                      local_plane=SimLocalPlane(caps=("cpu", "accel")))
+    plane.add_cluster("cheap-a",
+                      local_plane=SimLocalPlane(caps=("cpu", "cheap-io")))
+    tier_of = {}
+    workers: Dict[str, list] = {"accel-a": [], "cheap-a": []}
+    queues = {}
+    for i in range(2):
+        wa, wc = f"wa{i}", f"wc{i}"
+        workers["accel-a"].append(wa)
+        workers["cheap-a"].append(wc)
+        tier_of[wa], tier_of[wc] = "accel", "cheap-io"
+        # steered queue names are the steering tags themselves (the tasks
+        # declare no other requires); every worker also covers default
+        queues[wa] = ("accel", "default")
+        queues[wc] = ("cheap-io", "default")
+
+    def setup(worker):
+        worker.register("sim_train", lambda p: {"ok": 1})
+        worker.register("sim_etl", lambda p: {"ok": 1})
+
+    comp = HybridComposer(plane, workers=workers, worker_queues=queues,
+                          worker_batch=PLACEMENT_BATCH, worker_setup=setup,
+                          cost_aware=cost_aware)
+    comp.add_dag(_mixed_dag())
+    ok = comp.run_dag("mixed", max_ticks=N_MIXED * 8 + 200)
+
+    busy: Dict[str, int] = {}
+    misrouted = 0
+    for (dag, name, _try), row in comp.taskdb.rows.items():
+        if row.get("status") != "success":
+            continue
+        kind = "sim_train" if name.startswith("train") else "sim_etl"
+        tier = tier_of[row["worker"]]
+        busy[row["worker"]] = busy.get(row["worker"], 0) \
+            + SERVICE_TICKS[kind][tier]
+        best_tier = "accel" if kind == "sim_train" else "cheap-io"
+        if cost_aware and tier != best_tier:
+            misrouted += 1
+    return {
+        "cost_aware": cost_aware, "ok": bool(ok) and misrouted == 0,
+        "tasks": 2 * N_MIXED,
+        "makespan_ticks": max(busy.values()) if busy else 0,
+        "busy_ticks_per_worker": dict(sorted(busy.items())),
+        "misrouted": misrouted,
+    }
+
+
+def run_placement() -> dict:
+    naive = run_placement_fleet(cost_aware=False)
+    aware = run_placement_fleet(cost_aware=True)
+    gain = naive["makespan_ticks"] / max(aware["makespan_ticks"], 1)
+    return {
+        "label": ("mixed compute/IO DAG over a 2-tier fleet: naive "
+                  "least-load vs roofline-cost-aware queue steering"),
+        "naive": naive, "cost_aware": aware,
+        "ok": naive["ok"] and aware["ok"] and gain >= 1.5,
+        "gains": {"cost_aware_makespan_gain": gain},    # gate (c): >= 1.5
+    }
+
+
+# --------------------------------------------------- deterministic CI part
+def run_json_overhead() -> dict:
+    """Control-plane RPCs per executed task — deterministic counts (the
+    ``workloads:overhead`` CI gate; the wall-clock ratio lives in
+    ``overhead_wall`` and is only gated by the full ``make bench-check``)."""
+    plane = _train_plane()
+
+    def setup(worker):
+        worker.register("sim", lambda p: {"ok": 1})
+
+    comp = HybridComposer(plane, workers={"compute-a": ["w0"]},
+                          worker_batch=WORKER_BATCH, worker_setup=setup)
+    tasks = [Task("root", kind="sim")]
+    tasks += [Task(f"t{i}", kind="sim", upstream=("root",))
+              for i in range(OVERHEAD_TASKS - 1)]
+    comp.add_dag(DAG("wide", tasks))
+    ok = comp.run_dag("wide", max_ticks=OVERHEAD_TASKS // WORKER_BATCH + 200)
+    rpcs = (sum(comp.broker.op_counts.values())
+            + sum(comp.taskdb.op_counts.values()))
+    return {
+        "label": ("broker+taskdb RPCs per executed task, wide "
+                  f"{OVERHEAD_TASKS}-task instant-handler DAG"),
+        "tasks": OVERHEAD_TASKS, "ok": bool(ok),
+        "broker_rpcs": sum(comp.broker.op_counts.values()),
+        "taskdb_rpcs": sum(comp.taskdb.op_counts.values()),
+        "flatness": {"plane_rpcs_per_task": rpcs / OVERHEAD_TASKS},
+    }
+
+
+_CACHE: dict = {}
+
+
+def run_sweep() -> dict:
+    if "sweep" in _CACHE:
+        return _CACHE["sweep"]
+    result = {
+        "label": "train/serve workloads on the hybrid pipeline plane",
+        "overhead": run_json_overhead(),
+        "placement": run_placement(),
+        "overhead_wall": run_overhead_wall(),
+        "cache": run_cache(),
+    }
+    _CACHE["sweep"] = result
+    return result
+
+
+def run() -> List[tuple]:
+    sweep = run_sweep()
+    ov, ow = sweep["overhead"], sweep["overhead_wall"]
+    ca, pl = sweep["cache"], sweep["placement"]
+    return [
+        ("plane_rpcs_per_task", ov["flatness"]["plane_rpcs_per_task"]),
+        ("plane_overhead_ratio", ow["flatness"]["plane_overhead_ratio"]),
+        ("bare_train_wall_s", ow["bare_wall_s"]),
+        ("plane_train_wall_s", ow["plane_wall_s"]),
+        ("cache_cold_wall_s", ca["cold"]["wall_s"]),
+        ("cache_warm_wall_s", ca["warm"]["wall_s"]),
+        ("compiled_step_cache_gain", ca["gains"]["compiled_step_cache_gain"]),
+        ("naive_makespan_ticks", float(pl["naive"]["makespan_ticks"])),
+        ("cost_aware_makespan_ticks",
+         float(pl["cost_aware"]["makespan_ticks"])),
+        ("cost_aware_makespan_gain",
+         pl["gains"]["cost_aware_makespan_gain"]),
+    ]
+
+
+def run_json() -> dict:
+    """Structured payload for ``benchmarks/run.py --json``."""
+    return run_sweep()

@@ -1,36 +1,55 @@
 """Paper §5 end to end: a hybrid Airflow/Composer ETL->train->eval->export DAG.
 
-Scheduler/broker/taskdb live on the public master; one worker is public, one is
-on-prem. The 'train' task is compliance-tagged to run on-prem (the paper's
-"data must stay private" case); every hop between worker and broker/db crosses
-the hybrid platform's gateways.
+Scheduler/broker/taskdb live on the public master; one worker is public (the
+cheap IO tier), one is on-prem (the accelerator tier). The 'train' task is
+compliance-tagged to run on-prem (the paper's "data must stay private" case);
+every hop between worker and broker/db crosses the hybrid platform's gateways.
+
+Two workload optimizations ride the same run:
+
+  * roofline-cost-aware routing (``cost_aware=True``): each task is priced as
+    a cost vector and its steering tag joins the queue name — the compute-
+    bound train/eval stages ride the ``accel`` queues to the on-prem worker,
+    the IO-bound extract/export stages ride ``cheap-io`` to the public one;
+  * the compiled-step cache: train and eval share one warm jit-compiled
+    Trainer on the on-prem worker (eval re-binds it instead of rebuilding).
 
   PYTHONPATH=src python examples/hybrid_pipeline.py
 """
-from repro.core.plane import ManagementPlane
+import tempfile
+
+from repro.core.plane import ManagementPlane, SimLocalPlane
 from repro.pipelines import DAG, Task, HybridComposer
 
 
 def main() -> None:
     plane = ManagementPlane()
-    plane.add_cluster("master", is_master=True)
-    plane.add_cluster("onprem")
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control", "cheap-io")))
+    plane.add_cluster("onprem",
+                      local_plane=SimLocalPlane(caps=("cpu", "onprem",
+                                                      "accel")))
     comp = HybridComposer(
         plane,
         workers={"master": ["w-public"], "onprem": ["w-onprem"]},
-        worker_queues={"w-public": ("default",),
-                       "w-onprem": ("onprem", "default")})
+        # queue names are capability sets: with cost_aware on, the steered
+        # queues are the steering tags (plus any compliance pins), so each
+        # worker subscribes the queues its tier should drain
+        worker_queues={"w-public": ("cheap-io", "default"),
+                       "w-onprem": ("accel", "accel,onprem", "onprem",
+                                    "default")},
+        cost_aware=True)
 
+    ck_dir = tempfile.mkdtemp(prefix="titchener_pipeline_ck_")
     dag = DAG("daily_finetune", [
         Task("extract", kind="etl", payload={"batches": 3, "seq_len": 32}),
         Task("train_private", kind="train", upstream=("extract",),
              requires=("onprem",),                 # compliance pin
              payload={"arch": "qwen3-0.6b", "steps": 6, "seq_len": 32,
-                      "global_batch": 4,
-                      "checkpoint_dir": "/tmp/titchener_pipeline_ck"}),
+                      "global_batch": 4, "checkpoint_dir": ck_dir}),
         Task("evaluate", kind="eval", upstream=("train_private",),
              payload={"arch": "qwen3-0.6b", "seq_len": 32, "global_batch": 4,
-                      "restore_from": {"path": "/tmp/titchener_pipeline_ck"}}),
+                      "restore_from": {"path": ck_dir}}),
         Task("export", kind="export", upstream=("evaluate",),
              payload={"arch": "qwen3-0.6b"}),
     ])
@@ -42,10 +61,21 @@ def main() -> None:
     for name, row in sorted(state.items()):
         print(f"  {name:15s} {row['status']:8s} worker={row.get('worker')} "
               f"result={row.get('result')}")
+    # cost-aware steering: compute-bound stages on the accel tier, IO-bound
+    # on the cheap tier; train+eval shared one warm compiled Trainer
+    assert state["train_private"]["worker"] == "w-onprem"
+    assert state["evaluate"]["worker"] == "w-onprem"
+    assert state["extract"]["worker"] == "w-public"
+    assert state["export"]["worker"] == "w-public"
+    cache = comp.workers[1]._trainer_cache
+    if cache is not None:
+        print(f"compiled-step cache: {cache.stats()}")
     rep = plane.boundary_report()
     print(f"cross-cloud bytes {rep['cross_cluster_bytes']:,}, "
           f"locality {rep['locality_ratio']:.1%}")
     assert ok
+    assert state["evaluate"]["result"]["restored_step"] == 6
+    assert state["train_private"]["result"]["ran_steps"] == 6
 
 
 if __name__ == "__main__":

@@ -35,6 +35,12 @@ class ScalingPolicy:
     family: str
     queues: Tuple[str, ...] = ("default",)
     requires: Tuple[str, ...] = ()       # capability tags of the worker pod
+    # roofline cost class this family serves (compute | memory | io): folds
+    # the class's steering capability (repro.roofline.cost.CLASS_CAPS) into
+    # ``requires``, so the family's pods only land on — and its spawn jobs
+    # carry the cost_class tag for — the matching cluster tier. None keeps
+    # the family tier-agnostic (byte-identical to the pre-cost plane).
+    cost_class: "str | None" = None
     target_depth_per_worker: float = 8.0
     min_replicas: int = 0
     max_replicas: int = 8
@@ -46,6 +52,15 @@ class ScalingPolicy:
     down_cooldown: float = 3.0
 
     def __post_init__(self):
+        if self.cost_class is not None:
+            from repro.roofline.cost import steering_cap
+            cap = steering_cap(self.cost_class)
+            if cap is None:
+                raise ValueError(f"family {self.family}: unknown cost class "
+                                 f"{self.cost_class!r}")
+            if cap not in self.requires:
+                # frozen dataclass: fold the steering capability in here
+                object.__setattr__(self, "requires", self.requires + (cap,))
         if not self.queues:
             raise ValueError(f"family {self.family}: needs at least one queue")
         if self.target_depth_per_worker <= 0:

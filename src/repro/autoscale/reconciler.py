@@ -228,11 +228,14 @@ class Reconciler:
                           else "no_eligible_cluster")
         seq = next(self._seq)
         name = f"wp-{family}-{seq}"
+        tags = {"requires": list(policy.requires),
+                "queues": list(policy.queues), "family": family}
+        if policy.cost_class is not None:
+            # the dispatcher's cost-class steering covers the cold start,
+            # when the family's queues have no published depth yet
+            tags["cost_class"] = policy.cost_class
         job = {"job_id": name, "kind": "worker-pod", "arch": "",
-               "steps": WORKER_POD_STEPS,
-               "tags": {"requires": list(policy.requires),
-                        "queues": list(policy.queues), "family": family},
-               "payload": {}}
+               "steps": WORKER_POD_STEPS, "tags": tags, "payload": {}}
         # Pick-then-dispatch so an unreachable cluster (partitioned while its
         # registration lease is still live) can be EXCLUDED and the pick
         # re-run over the survivors — a plain retry could re-pick the same

@@ -375,7 +375,8 @@ class Dispatcher:
         needs = set(job.get("tags", {}).get("requires", ()))
         matched = [r for r in self.rules if r.match(job)]
         return self._pick(needs, matched,
-                          job.get("tags", {}).get("queues", ()))
+                          job.get("tags", {}).get("queues", ()),
+                          job.get("tags", {}).get("cost_class"))
 
     def _min_load_hi(self) -> int:
         """End index of the least-loaded tie block: the contiguous,
@@ -387,7 +388,17 @@ class Dispatcher:
         return bisect.bisect_right(self._load_order, (min_load, "\U0010ffff"))
 
     def _pick(self, needs: Set[str], matched: List[RoutingRule],
-              queue_pref=()) -> Optional[str]:
+              queue_pref=(), cost_class: Optional[str] = None
+              ) -> Optional[str]:
+        # roofline steering: a job tagged with a cost class prefers clusters
+        # whose capability profile matches its tier (accel for compute/
+        # memory-bound, cheap-io for IO-bound). Soft preference only — with
+        # no matching tier registered, placement degrades to the depth/load
+        # logic below, and an untagged job is byte-identical to today.
+        pref_cap = None
+        if cost_class is not None:
+            from repro.roofline.cost import steering_cap
+            pref_cap = steering_cap(cost_class)
         if queue_pref:
             # worker-pod job: deepest matching backlog wins, least-load breaks
             # ties (and carries the decision when no depth is published yet).
@@ -408,12 +419,31 @@ class Dispatcher:
             for name in sorted(cands):
                 caps = set(self._clusters[name].get("capabilities", ()))
                 score = sum(r for tags, r in pref if tags <= caps)
-                key = (-score, self._cur_load.get(name, 0.0))
+                # depth first; tier match breaks depth ties (cold start: no
+                # depth published yet steers by profile alone); then load
+                key = (-score,
+                       0 if pref_cap is None or pref_cap in caps else 1,
+                       self._cur_load.get(name, 0.0))
                 if best_key is None or key < best_key:
                     best_key, best = key, [name]
                 elif key == best_key:
                     best.append(name)
             return best[next(self._rr) % len(best)]
+        if pref_cap is not None:
+            cands = self._eligible(needs, matched)
+            tier = cands & self._caps_index.get(pref_cap, set())
+            if tier and tier != cands:
+                # least-load within the matching tier
+                best, best_load = [], None
+                for load, name in self._load_order:
+                    if name not in tier:
+                        continue
+                    if best_load is None:
+                        best_load = load
+                    elif load != best_load:
+                        break
+                    best.append(name)
+                return best[next(self._rr) % len(best)]
         if not needs and not matched:
             # unconstrained job: every cluster is eligible — index the tie
             # block directly, no list materialization on the per-job path
@@ -482,7 +512,9 @@ class Dispatcher:
             needs = set(job.get("tags", {}).get("requires", ()))
             matched = [r for r in self.rules if r.match(job)]
             queue_pref = job.get("tags", {}).get("queues", ())
-            if not needs and not matched and not queue_pref:
+            cost_class = job.get("tags", {}).get("cost_class")
+            if not needs and not matched and not queue_pref \
+                    and cost_class is None:
                 while True:
                     if block is None:
                         hi = self._min_load_hi()
@@ -498,7 +530,7 @@ class Dispatcher:
                     # and re-probe
                     block = None
             else:
-                cluster = self._pick(needs, matched, queue_pref)
+                cluster = self._pick(needs, matched, queue_pref, cost_class)
                 if cluster is None:
                     raise RuntimeError(
                         f"no eligible cluster for job {job['job_id']} "
@@ -516,7 +548,7 @@ class Dispatcher:
                 # of the batch stay placed.
                 self.ow.flush_watches()
                 block = None
-                cluster = self._pick(needs, matched, queue_pref)
+                cluster = self._pick(needs, matched, queue_pref, cost_class)
                 if cluster is None:
                     raise RuntimeError(
                         f"no eligible cluster for job {job['job_id']} "

@@ -115,10 +115,21 @@ class HybridComposer:
                  depth_gated_workers: bool = False,
                  depth_gate_max_lag: float = 2.0,
                  durability=None,
-                 wal_snapshot_every: int = 8192):
+                 wal_snapshot_every: int = 8192,
+                 cost_aware: bool = False,
+                 step_cache: int = 4):
         self.plane = plane
         self.worker_batch = worker_batch
         self.pipelined = pipelined
+        # roofline-cost-aware queue routing (repro.roofline.cost): priced
+        # tasks gain their steering capability tag in the queue name, so
+        # compute-bound stages route to accelerator-tier workers and IO-bound
+        # stages to the cheap tier. False (default) is byte-identical to the
+        # depth-aware-only plane; unpriced tasks are never steered.
+        self.cost_aware = cost_aware
+        # per-worker compiled-step cache capacity ((arch, shape, mode) ->
+        # warm Trainer/Server); 0 disables (cold rebuild per task)
+        self.step_cache = step_cache
         # durability (repro.core.durability.LogStore): WAL shards "taskdb" +
         # one per broker service, group-committed per tick (taskdb first).
         # None => byte-identical to the non-durable composer. Public: the
@@ -177,7 +188,8 @@ class HybridComposer:
         sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
         self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
                                    batched=self.pipelined,
-                                   broker_for=self.router.service_for_queue)
+                                   broker_for=self.router.service_for_queue,
+                                   cost_aware=self.cost_aware)
 
     def _make_worker(self, name: str, cluster: str,
                      queues: Tuple[str, ...]) -> PipelineWorker:
@@ -188,7 +200,8 @@ class HybridComposer:
             client, name, queues=queues, clock_fn=lambda: fabric.clock,
             batch=self.worker_batch, pipelined=self.pipelined,
             broker_for=self.router.service_for_queue,
-            depth_hint=self._depth_hint_for(agent))
+            depth_hint=self._depth_hint_for(agent),
+            step_cache=self.step_cache)
         if self.worker_setup is not None:
             self.worker_setup(worker)
         self.workers.append(worker)
@@ -406,7 +419,8 @@ class HybridComposer:
                 status = (row or {}).get("status")
                 if status in ("queued", "running"):
                     if (did, name, row["try"]) not in held:
-                        pushes.setdefault(queue_for(task), []).append(
+                        pushes.setdefault(
+                            queue_for(task, self.cost_aware), []).append(
                             Scheduler.build_message(did, task, row["try"]))
                         reseeded += 1
                 elif row is None and (did, name) in held_tasks:

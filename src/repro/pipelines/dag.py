@@ -26,6 +26,10 @@ class Task:
     requires: Tuple[str, ...] = ()       # capability tags (compliance routing)
     retries: int = 1
     fn: Optional[Callable[[dict], dict]] = None   # python tasks (tests/examples)
+    # explicit roofline cost vector (flops/hbm_bytes/collective_bytes/io_bytes
+    # — e.g. a committed hlo_stats dry-run artifact); None defers to
+    # ``repro.roofline.cost.task_cost``'s payload/analytic fallbacks
+    cost: Optional[dict] = None
 
 
 class DAG:

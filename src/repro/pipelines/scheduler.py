@@ -37,17 +37,32 @@ from repro.pipelines.services import ServiceClient
 TERMINAL = ("success", "failed", "upstream_failed")
 
 
-def queue_for(task: Task) -> str:
-    return ",".join(sorted(task.requires)) or "default"
+def queue_for(task: Task, cost_aware: bool = False) -> str:
+    """Queue name = sorted capability set. With ``cost_aware`` the task's
+    roofline steering tag (``repro.roofline.cost``) joins the set, so the
+    existing capability-set routing — broker queues, dispatcher depth-aware
+    placement, autoscaler families — steers by cost class with no new wire
+    protocol. An unpriced task (no cost signal) routes exactly as before."""
+    tags = set(task.requires)
+    if cost_aware:
+        from repro.roofline.cost import steering_tag   # lazy: off-path import
+        tag = steering_tag(task)
+        if tag:
+            tags.add(tag)
+    return ",".join(sorted(tags)) or "default"
 
 
 class Scheduler:
     def __init__(self, client: ServiceClient, clock_fn=None,
-                 batched: bool = True, broker_for=None):
+                 batched: bool = True, broker_for=None,
+                 cost_aware: bool = False):
         self.client = client
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.batched = batched
+        # roofline-cost-aware queue routing; False is byte-identical to the
+        # depth-aware-only plane (asserted by test_workloads equivalence)
+        self.cost_aware = cost_aware
         # queue -> broker service name (per-family sharding); the default is
         # the single unsharded "broker" service
         self.broker_for = broker_for or (lambda queue: "broker")
@@ -216,7 +231,7 @@ class Scheduler:
                rows: List[dict], pushes: Dict[str, List[dict]]) -> None:
         rows.append({"dag": did, "task": task.name, "try": try_n,
                      "status": "queued", "clock": clock})
-        pushes.setdefault(queue_for(task), []).append(
+        pushes.setdefault(queue_for(task, self.cost_aware), []).append(
             self.build_message(did, task, try_n))
 
     @staticmethod

@@ -81,6 +81,29 @@ class Server:
         self._prefill_cache: Dict[int, object] = {}
         self._rng = jax.random.PRNGKey(cfg.seed + 17)
         self.steps = 0
+        self._init_params = self.params
+        self._init_seed = cfg.seed
+
+    def rebind(self, cfg: ServeJobConfig) -> None:
+        """Re-arm a warm server for a new task of the SAME compiled family
+        (the step-cache hit path): fresh request/slot/cache state, same model
+        and jitted decode/prefill functions. The caller guarantees the cache
+        key (arch, reduced, slots, max_len) matches; eos/greedy/seed are
+        host-side and may differ."""
+        if cfg.seed == self._init_seed:
+            self.params = self._init_params
+        else:
+            self.params = self.model.init_params(jax.random.PRNGKey(cfg.seed))
+            self._init_params = self.params
+            self._init_seed = cfg.seed
+        self.cfg = cfg
+        self.cache = self.model.init_cache(cfg.slots, cfg.max_len)
+        self.slots = [None] * cfg.slots
+        self.queue = deque()
+        self.requests: Dict[str, Request] = {}
+        self._ids = itertools.count(1)
+        self._rng = jax.random.PRNGKey(cfg.seed + 17)
+        self.steps = 0
 
     # ------------------------------------------------------------- batch-axis magic
     def _locate_batch_axes(self, L: int):

@@ -94,8 +94,47 @@ class Trainer:
             self.step_fn = jax.jit(make_train_step(self.model, cfg.opt,
                                                    cfg.microbatches))
 
+        # pristine copies for ``rebind``: JAX updates are functional, so the
+        # initial tree can be handed back verbatim when a cached trainer is
+        # re-armed for a new task of the same compiled family
+        self._init_state = self.state
+        self._init_seed = cfg.seed
         self.data = SyntheticTokens(
             vocab_size=arch_cfg.vocab_size, seq_len=cfg.seq_len,
+            global_batch=cfg.global_batch, seed=cfg.seed, task=cfg.data_task)
+        self.metrics = MetricsLog()
+        self.timer = StepTimer(tokens_per_step=cfg.global_batch * cfg.seq_len)
+        self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
+                     if cfg.checkpoint_dir else None)
+        if self.ckpt and on_checkpoint:
+            self.ckpt.on_commit(on_checkpoint)
+
+    def rebind(self, cfg: TrainJobConfig,
+               on_checkpoint: Optional[Callable[[int, str], None]] = None
+               ) -> None:
+        """Re-arm a warm trainer for a new task of the SAME compiled family
+        (the step-cache hit path): reset step/state/data/metrics, point the
+        checkpoint manager at the task's directory, and keep the model and
+        jitted step function — the expensive part — untouched. The caller
+        (``repro.runtime.step_cache``) guarantees the cache key (arch, shape,
+        mode, ...) matches; only per-run knobs may differ here."""
+        if self.ckpt:
+            self.ckpt.wait()             # bound the previous task's async save
+        if cfg.seed == self._init_seed:
+            self.state = self._init_state
+        else:
+            if cfg.mode == "local_sgd":
+                params = self.model.init_params(jax.random.PRNGKey(cfg.seed))
+                self.state = init_local_sgd_state(params, cfg.n_pods)
+            else:
+                self.state = init_train_state(self.model,
+                                              jax.random.PRNGKey(cfg.seed))
+            self._init_state = self.state
+            self._init_seed = cfg.seed
+        self.cfg = cfg
+        self.step = 0
+        self.data = SyntheticTokens(
+            vocab_size=self.arch_cfg.vocab_size, seq_len=cfg.seq_len,
             global_batch=cfg.global_batch, seed=cfg.seed, task=cfg.data_task)
         self.metrics = MetricsLog()
         self.timer = StepTimer(tokens_per_step=cfg.global_batch * cfg.seq_len)
@@ -146,7 +185,11 @@ class Trainer:
         self.timer.tick()
         self.metrics.log(self.step, m)
         if (self.ckpt and self.step % self.cfg.checkpoint_every == 0):
-            self.save_checkpoint()
+            # non-blocking: the manager snapshots host leaves synchronously,
+            # then writes on its thread while the next steps run — periodic
+            # checkpointing leaves the hot loop (save() itself serializes
+            # against a still-running previous write)
+            self.save_checkpoint(blocking=False)
         return m
 
     def run(self, steps: Optional[int] = None) -> Dict[str, float]:
@@ -157,24 +200,46 @@ class Trainer:
         return last
 
     # ---------------------------------------------------------------- checkpointing
-    def save_checkpoint(self) -> Optional[dict]:
+    def save_checkpoint(self, blocking: bool = True) -> Optional[dict]:
+        """Snapshot the train state. ``blocking=False`` returns as soon as
+        the host-side leaf snapshot is taken; the disk write overlaps the
+        following steps and the next save (or ``restore``/``rebind``/an
+        explicit blocking save) joins it."""
         if not self.ckpt:
             return None
         self.ckpt.save(self.step, self.state,
                        extra={"data": self.data.state_dict(),
                               "arch": self.cfg.arch, "mode": self.cfg.mode})
-        self.ckpt.wait()
+        if blocking:
+            self.ckpt.wait()
         return {"step": self.step, "path": str(self.ckpt.directory)}
 
-    def restore(self, manifest: Optional[dict] = None) -> int:
-        """Restore from a manifest {step, path} (or latest in our own dir)."""
+    def restore(self, manifest: Optional[dict] = None,
+                strict: bool = False) -> int:
+        """Restore from a manifest {step, path} (or latest in our own dir).
+
+        Returns the restored step; 0 means "no checkpoint, fresh start" —
+        the resume semantics a train task wants. ``strict=True`` raises
+        instead (``FileNotFoundError``): an eval task told to restore MUST
+        see a committed checkpoint, never silently score fresh params. All
+        integrity checks (manifest-vs-directory staleness, missing leaves,
+        torn writes) are ``CheckpointManager.restore``'s and always raise."""
+        if self.ckpt:
+            self.ckpt.wait()             # our own async save is a valid source
         directory = (manifest or {}).get("path") or (
             self.cfg.checkpoint_dir if self.ckpt else None)
         if directory is None:
+            if strict:
+                raise FileNotFoundError(
+                    f"restore requested but no checkpoint directory in "
+                    f"manifest or config: {manifest!r}")
             return 0
         mgr = CheckpointManager(directory)
         step = (manifest or {}).get("step") or mgr.latest_step()
         if step is None:
+            if strict:
+                raise FileNotFoundError(
+                    f"no committed checkpoint in {directory}")
             return 0
         self.state, step, extra = mgr.restore(self.state, step=step)
         self.data.load_state_dict(extra["data"])

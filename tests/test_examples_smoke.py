@@ -1,0 +1,31 @@
+"""The committed examples, run as tests (slow-marked): the end-to-end DAG
+example must keep passing its own assertions (cost-aware steering, warm
+compiled-step cache, strict eval restore), and the 100M-param trainer must
+still learn at a smoke-sized step count."""
+import importlib.util
+import pathlib
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(name,
+                                                  EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+def test_hybrid_pipeline_example():
+    _load("hybrid_pipeline").main()
+
+
+@pytest.mark.slow
+def test_train_100m_example_reduced():
+    # smoke-sized: the example's own assertion switches to a loss-is-falling
+    # bar below 150 steps
+    _load("train_100m").main(["--steps", "40", "--seq-len", "32",
+                              "--batch", "2"])

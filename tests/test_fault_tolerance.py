@@ -356,3 +356,66 @@ def test_chaos_watcher_stream_consistent_after_triple_crash():
     assert revs and revs == sorted(revs)
     assert agent.local_view("/queues/").items() == \
         plane.overwatch.handle({"op": "range", "prefix": "/queues/"})["items"]
+
+
+# ----------------------------------------------- workload resume (warm fleet)
+def test_redelivered_train_task_resumes_not_reruns(tmp_path):
+    """A train task's worker dies AFTER the checkpoint committed but BEFORE
+    the taskdb/ack commit: the redelivered copy restores the committed step
+    and runs ZERO steps — exactly-once step accounting rides the checkpoint,
+    whatever the delivery count."""
+    from repro.runtime.step_cache import run_train_task
+
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("onprem-a")
+    comp = HybridComposer(plane, workers={"onprem-a": ["w1"]})
+    comp.broker.lease = 5.0
+    payload = {"arch": "qwen3-0.6b", "seq_len": 8, "global_batch": 2,
+               "steps": 4, "checkpoint_every": 2,
+               "checkpoint_dir": str(tmp_path / "ck")}
+    comp.add_dag(DAG("r", [Task("t", kind="train", payload=payload)]))
+    comp.scheduler.tick()                # stage the task onto the broker
+    w1 = comp.workers[0]
+    assert w1.pull_phase() == 1          # w1 leases it...
+    run_train_task(None, dict(payload))  # ...runs it (checkpoint commits)...
+    comp.workers.remove(w1)              # ...and dies before commit/ack
+    plane.tick(n=8)                      # lease expires -> redelivery
+    comp.add_worker("w2", "onprem-a")
+    assert comp.run_dag("r", max_ticks=80)
+    row = comp.taskdb.handle({"op": "latest", "dag": "r", "task": "t"})["row"]
+    assert row["worker"] == "w2"
+    assert row["result"]["steps"] == 4 and row["result"]["ran_steps"] == 0
+    assert row["result"]["resumed_from"] == 4
+
+
+def test_eval_fails_on_half_written_checkpoint(tmp_path):
+    """Regression: an eval task pointed at a torn or absent checkpoint must
+    FAIL (strict restore), never silently score fresh params as a success."""
+    ck = tmp_path / "ck"
+    tr = Trainer(TrainJobConfig(arch="qwen3-0.6b", seq_len=8, global_batch=2,
+                                steps=2, checkpoint_dir=str(ck)))
+    tr.run()
+    tr.save_checkpoint()
+    # tear the committed checkpoint: truncate one leaf under the manifest
+    leaf = sorted((ck / "step_00000002").glob("leaf_*.bin"))[0]
+    leaf.write_bytes(leaf.read_bytes()[:-4])
+
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    plane.add_cluster("onprem-a")
+    comp = HybridComposer(plane, workers={"onprem-a": ["w1"]})
+    base = {"arch": "qwen3-0.6b", "seq_len": 8, "global_batch": 2}
+    comp.add_dag(DAG("e", [
+        Task("torn", kind="eval", retries=0,
+             payload={**base, "restore_from": {"path": str(ck)}}),
+        Task("absent", kind="eval", retries=0,
+             payload={**base,
+                      "restore_from": {"path": str(tmp_path / "nowhere")}}),
+    ]))
+    assert comp.run_dag("e", max_ticks=80) is False
+    state = comp.taskdb.handle({"op": "dag_state", "dag": "e"})["tasks"]
+    assert state["torn"]["status"] == "failed"
+    assert state["absent"]["status"] == "failed"
+    assert "result" not in state["torn"] or not (
+        state["torn"].get("result") or {}).get("eval_loss")

@@ -103,3 +103,48 @@ def test_train_task_through_pipeline(composer):
                               "task": "train_tiny"})["row"]
     assert row["result"]["steps"] == 2
     assert row["result"]["loss"] is not None
+
+
+def test_mid_dag_train_resume_across_worker_retire(tmp_path):
+    """Mid-DAG resume with an elastic fleet: stage 1 trains to step 4 and
+    checkpoints; the autoscaler retires the idle worker (scale-to-zero);
+    stage 2 raises the target to 8, and the freshly spawned pod restores the
+    committed step and runs exactly the 4-step remainder — exactly-once step
+    accounting across retire/re-spawn."""
+    from repro.autoscale import ScalingPolicy
+    from repro.core.plane import SimLocalPlane
+
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    comp = HybridComposer(plane, workers={})
+    asc = comp.attach_autoscaler(
+        [ScalingPolicy(family="default", queues=("default",),
+                       requires=("cpu",), target_depth_per_worker=8,
+                       min_replicas=0, max_replicas=1,
+                       up_cooldown=0.0, down_cooldown=0.0)])
+    base = {"arch": "qwen3-0.6b", "seq_len": 8, "global_batch": 2,
+            "checkpoint_every": 2, "checkpoint_dir": str(tmp_path / "ck")}
+    comp.add_dag(DAG("s1", [Task("t", kind="train",
+                                 payload={**base, "steps": 4})]))
+    assert comp.run_dag("s1", max_ticks=120)
+    row1 = comp.taskdb.handle({"op": "latest", "dag": "s1",
+                               "task": "t"})["row"]
+    assert row1["result"]["ran_steps"] == 4
+    assert row1["result"]["checkpoint"]["step"] == 4
+    # queues now empty -> the policy drains and retires the pod
+    for _ in range(200):
+        comp.tick()
+        if asc.replicas("default") == 0 and not comp.workers:
+            break
+    assert asc.replicas("default") == 0 and not comp.workers
+    comp.add_dag(DAG("s2", [Task("t", kind="train",
+                                 payload={**base, "steps": 8})]))
+    assert comp.run_dag("s2", max_ticks=120)
+    row2 = comp.taskdb.handle({"op": "latest", "dag": "s2",
+                               "task": "t"})["row"]
+    assert row2["worker"] != row1["worker"]        # a different pod
+    assert row2["result"]["resumed_from"] == 4
+    assert row2["result"]["ran_steps"] == 4
+    assert row2["result"]["steps"] == 8
