@@ -6,13 +6,13 @@
 
 PYTHONPATH := src
 
-.PHONY: test bench bench-all bench-check bench-check-ci chaos
+.PHONY: test bench bench-all bench-check bench-check-ci chaos trace-report
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale durability workloads train_throughput kernels_bench
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json control_plane pipeline_plane autoscale durability workloads observability train_throughput kernels_bench
 
 # Full 50k-task chaos matrix (scripted master crashes, exactly-once
 # verdicts) — the human-readable face of the durability suite
@@ -39,5 +39,16 @@ bench-check:
 # workloads:overhead gates the deterministic plane-RPCs-per-task count; the
 # suite's wall-clock gates (plane-overhead ratio, compiled-step-cache gain)
 # only run in the full `make bench-check`
+# observability:overhead gates exact span accounting (5 spans per executed
+# task, hard-zero lost/double-closed/leaked spans across one injected
+# crash), trace bytes per task, and the hard-zero cross-boundary cost of a
+# fleet-wide /metrics/ read — all deterministic ledgers; the tracing
+# wall-clock ratio (observability:overhead_wall) only runs in the full
+# `make bench-check`
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery workloads:overhead
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery workloads:overhead observability:overhead
+
+# the flight recorder's human view: critical-path decomposition of the
+# slowest trace on a freshly traced DAG (queue-wait vs execute vs commit)
+trace-report:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.observability --report

@@ -33,7 +33,7 @@ import traceback
 from typing import Dict, List, Tuple
 
 GATED_SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability",
-                "workloads")
+                "workloads", "observability")
 TOLERANCE = 1.2          # a gated number may move 20% the wrong way
 
 

@@ -22,8 +22,8 @@ import sys
 import traceback
 
 SUITES = ("control_plane", "pipeline_plane", "autoscale", "durability",
-          "workloads", "collective_locality", "roofline_bench",
-          "kernels_bench", "train_throughput")
+          "workloads", "observability", "collective_locality",
+          "roofline_bench", "kernels_bench", "train_throughput")
 
 
 def _rows_to_json(rows) -> dict:

@@ -38,6 +38,7 @@ from repro.core import gateways as GW
 from repro.core.overwatch import OverwatchClient
 from repro.core.service_graph import AppSpec
 from repro.core.transport import Address, DeliveryError, Envelope, Fabric
+from repro.observability.metrics import MetricsRegistry
 
 AGENT_PORT = 6000
 REPLICA_PORT = 6001           # the cluster-local read service (replica-fed)
@@ -77,6 +78,17 @@ class ControlAgent:
         self.replica = None                  # LocalReplica (fan-out mode)
         self.replica_addr: Optional[Address] = None   # read-service endpoint
         self._views: Dict[str, Any] = {}     # prefix -> cached ReplicaView
+        # flight recorder: every agent owns its cluster's metrics registry
+        # (components hosted here register sources on it); publication into
+        # /metrics/<cluster>/ is OPT-IN via ``metrics_every`` — None keeps
+        # the heartbeat byte-identical to the unmetered plane
+        self.metrics = MetricsRegistry(cluster)
+        self.metrics_every: Optional[float] = None
+        self._metrics_published_at: Optional[float] = None
+        self._published_metrics: Dict[str, dict] = {}
+        # plane-shared tracer (set by ManagementPlane when tracing is on):
+        # dispatch handling opens an "accept" span under the riding context
+        self.tracer = None
         # telemetry envelope size is shape-constant (fixed keys, numeric
         # values): computed on the first heartbeat, reused forever after so
         # the fabric's byte accounting never re-walks the hottest message
@@ -137,6 +149,8 @@ class ControlAgent:
         registers it master-side)."""
         from repro.core.replica import REPLICA_PREFIXES, LocalReplica
         self.replica = LocalReplica(prefixes or REPLICA_PREFIXES)
+        self.metrics.register_source(
+            "replica", lambda: dict(self.replica.stats))
         if self.ow is not None:
             self.ow.replica = self.replica
         self.replica_addr = (self.addr[0], REPLICA_PORT)
@@ -234,7 +248,24 @@ class ControlAgent:
             self.configure_partition(msg["spec"], msg["master_state"])
             return {"ok": True}
         if kind == "dispatch":
-            return self.accept_job(msg["job"])
+            tr = self.tracer
+            ctx = (self.fabric.current_trace() or msg.get("trace")) \
+                if tr is not None else None
+            if ctx is None:
+                return self.accept_job(msg["job"])
+            # the context rode the dispatch envelope across the relay hops;
+            # the accept span records the remote-cluster half of submission
+            t0 = tr.clock()
+            try:
+                resp = self.accept_job(msg["job"])
+            except BaseException:
+                tr.span_complete(ctx, "accept", "agent", t0, "failed",
+                                 {"cluster": self.cluster})
+                raise
+            tr.span_complete(ctx, "accept", "agent", t0,
+                             "ok" if resp.get("ok") else "failed",
+                             {"cluster": self.cluster})
+            return resp
         if kind == "cancel":
             return self.cancel_job(msg["job_id"])
         if kind == "retire":
@@ -319,10 +350,34 @@ class ControlAgent:
             }, nbytes=self._telemetry_nbytes)
             self.ow.request(req)
             self._telemetry_nbytes = req.nbytes
+            self.publish_metrics()
             self.missed_heartbeats = 0
         except (DeliveryError, RuntimeError):
             self.missed_heartbeats += 1
         self._schedule_heartbeat()
+
+    def publish_metrics(self) -> None:
+        """Export this cluster's metrics registry into the overwatch under
+        ``/metrics/<cluster>/<section>`` — one put per CHANGED section, at
+        most every ``metrics_every`` clock units (no-op when unset). The keys
+        join the replica delta feed ("/metrics/" is a replicated prefix), so
+        a fleet-wide scrape is a ``range_stale("/metrics/")`` against any
+        replica: zero cross-boundary bytes per read. The publish itself rides
+        this agent's existing overwatch tunnel and is priced like any put.
+        The last-published cache updates only after a put LANDS — a
+        partition-eaten publish retries on the next cadence."""
+        if self.metrics_every is None or self.ow is None:
+            return
+        now = self.fabric.clock
+        if (self._metrics_published_at is not None
+                and now - self._metrics_published_at < self.metrics_every):
+            return
+        self._metrics_published_at = now
+        for section, values in sorted(self.metrics.sections().items()):
+            if self._published_metrics.get(section) == values:
+                continue                     # unchanged: nothing to ship
+            self.ow.put(f"/metrics/{self.cluster}/{section}", values)
+            self._published_metrics[section] = values
 
     # ------------------------------------------------------ local-path reads
     def fleet_telemetry(self, max_lag: float = 2.0) -> Dict[str, dict]:

@@ -83,6 +83,10 @@ class Dispatcher:
         self.rules: List[RoutingRule] = []
         self.straggler_factor = straggler_factor
         self._rr = itertools.count()
+        # flight recorder (set by ManagementPlane): sampled job submissions
+        # open a "job" root + "dispatch" child whose context rides the
+        # dispatch envelope to the remote agent
+        self.tracer = None
         self.dispatch_log: List[tuple] = []
         self._relays: Dict[tuple, tuple] = {}
         # ------------------------- materialized views (watch-invalidated)
@@ -470,13 +474,29 @@ class Dispatcher:
         # so the walk always finds at least one entry
         return best[next(self._rr) % len(best)]
 
+    def _trace_root(self, job: dict):
+        """Root span for a sampled job submission (None when untraced)."""
+        tr = self.tracer
+        if tr is None:
+            return None
+        tid = f"job/{job['job_id']}"
+        if not tr.sampled(tid):
+            return None
+        return tr.open_span("job", "dispatcher", trace_id=tid)
+
     def submit(self, job: dict) -> str:
-        cluster = self.pick(job)
-        if cluster is None:
-            raise RuntimeError(f"no eligible cluster for job {job['job_id']} "
-                               f"(requires {job.get('tags', {})})")
-        self._dispatch_to(cluster, job)
-        return cluster
+        root = self._trace_root(job)
+        try:
+            cluster = self.pick(job)
+            if cluster is None:
+                raise RuntimeError(
+                    f"no eligible cluster for job {job['job_id']} "
+                    f"(requires {job.get('tags', {})})")
+            self._dispatch_to(cluster, job, _root=root)
+            return cluster
+        finally:
+            if root is not None:
+                self.tracer.end_span(root)
 
     def dispatch_to(self, cluster: str, job: dict) -> None:
         """Public placement-decided dispatch: the caller picked the cluster
@@ -484,15 +504,36 @@ class Dispatcher:
         unreachable dispatch was aimed at so it can exclude it and retry)."""
         self._dispatch_to(cluster, job)
 
-    def _dispatch_to(self, cluster: str, job: dict) -> None:
-        """Placement already decided: ship the job and record the placement."""
-        resp = self._send_agent(cluster, {"kind": "dispatch", "job": job})
-        if not resp.get("ok"):
-            raise RuntimeError(f"dispatch failed: {resp.get('error')}")
-        self.ow.handle({"op": "put", "key": f"/jobs/{job['job_id']}/placement",
-                        "value": {"cluster": cluster, "job": job,
-                                  "clock": self.fabric.clock}})
-        self.dispatch_log.append((self.fabric.clock, job["job_id"], cluster))
+    def _dispatch_to(self, cluster: str, job: dict, _root=None) -> None:
+        """Placement already decided: ship the job and record the placement.
+        Traced submissions attach the dispatch span's context to the
+        envelope; without a caller-held root (``dispatch_to``/
+        ``submit_many``) a sampled job gets its own root here."""
+        tr = self.tracer
+        msg = {"kind": "dispatch", "job": job}
+        sp = owned = None
+        if tr is not None:
+            if _root is None:
+                _root = owned = self._trace_root(job)
+            if _root is not None:
+                sp = tr.open_span("dispatch", "dispatcher", parent=_root,
+                                  attrs={"cluster": cluster})
+                msg["trace"] = sp
+        try:
+            resp = self._send_agent(cluster, msg)
+            if not resp.get("ok"):
+                raise RuntimeError(f"dispatch failed: {resp.get('error')}")
+            self.ow.handle(
+                {"op": "put", "key": f"/jobs/{job['job_id']}/placement",
+                 "value": {"cluster": cluster, "job": job,
+                           "clock": self.fabric.clock}})
+            self.dispatch_log.append(
+                (self.fabric.clock, job["job_id"], cluster))
+        finally:
+            if sp is not None:
+                tr.end_span(sp)
+            if owned is not None:
+                tr.end_span(owned)
 
     def submit_many(self, jobs: List[dict]) -> List[str]:
         """Batched admission: amortize ``pick()`` over the batch.

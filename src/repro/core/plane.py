@@ -63,9 +63,23 @@ class ManagementPlane:
                  coalesce_watches: bool = False,
                  replica_fanout: bool = False,
                  replica_prefixes=None,
-                 durability=None):
+                 durability=None,
+                 trace_sample: float = 0.0,
+                 metrics_every: Optional[float] = None):
         self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
+        # flight recorder: trace_sample > 0 arms a plane-wide tracer shared
+        # by the dispatcher, every agent, and any composer built on top
+        # (sampling is per-trace-id deterministic); 0 keeps every payload
+        # byte-identical. ``metrics_every`` turns on per-agent registry
+        # export under /metrics/<cluster>/ at that clock cadence (None: no
+        # publication — the default plane is unmetered on the wire).
+        self.tracer = None
+        if trace_sample > 0:
+            from repro.observability.trace import Tracer
+            self.tracer = Tracer(clock_fn=lambda: self.fabric.clock,
+                                 sample=trace_sample)
+        self.metrics_every = metrics_every
         self._idx = itertools.count(1)
         self.agents: Dict[str, ControlAgent] = {}
         self.ow_shards = max(1, ow_shards)
@@ -82,6 +96,7 @@ class ManagementPlane:
                                           coalesce_watches=coalesce_watches,
                                           durability=durability)
         self.dispatcher = Dispatcher(self.fabric, master, self.overwatch)
+        self.dispatcher.tracer = self.tracer
         # replica fan-out (off by default — behavior-identical without it):
         # every non-master cluster hosts a LocalReplica fed by one coalesced
         # delta envelope per sweep, and remote range_stale reads go local
@@ -109,9 +124,12 @@ class ManagementPlane:
         idx = 0 if is_master else next(self._idx)
         agent = ControlAgent(self.fabric, name, idx, self.master, local_plane,
                              ow_shards=self.ow_shards)
+        agent.tracer = self.tracer
+        agent.metrics_every = self.metrics_every
         self.agents[name] = agent
         if is_master:
             self._master_agent = agent
+            self._register_master_metrics(agent)
         master_state = (self._master_agent.state if self._master_agent
                         else agent.state)
         agent.bootstrap(master_state)
@@ -126,6 +144,36 @@ class ManagementPlane:
     @property
     def master_agent(self) -> ControlAgent:
         return self._master_agent
+
+    def _register_master_metrics(self, agent: ControlAgent) -> None:
+        """The master agent's registry adopts the global-plane stats dicts:
+        the fabric's byte/operational ledgers (``fallback_reads`` et al. —
+        the same numbers ``boundary_report`` prints), the replica shipper,
+        and per-overwatch-shard op counts. Sources late-bind through
+        ``self``, so ``recover_global_plane``'s rebuilt services are picked
+        up without re-registration."""
+        def fabric_stats():
+            f = self.fabric
+            out = {"cross_cluster_bytes": f.cross_cluster_bytes(),
+                   "local_bytes": sum(f.local_bytes.values())}
+            out.update(f.stats)
+            return out
+
+        def shipper_stats():
+            return dict(self.shipper.stats) if self.shipper is not None \
+                else {}
+
+        def overwatch_stats():
+            ow = self.overwatch
+            out = {f"ops.{k}": v for k, v in ow.op_counts.items()}
+            for i, shard in enumerate(ow.shards):
+                out.update({f"s{i}.ops.{k}": v
+                            for k, v in shard.op_counts.items()})
+            return out
+
+        agent.metrics.register_source("fabric", fabric_stats)
+        agent.metrics.register_source("shipper", shipper_stats)
+        agent.metrics.register_source("overwatch", overwatch_stats)
 
     # ------------------------------------------------------------------ app config
     def upload_spec(self, spec: AppSpec) -> None:
@@ -193,6 +241,7 @@ class ManagementPlane:
                                           coalesce_watches=self._coalesce_watches,
                                           durability=self.durability)
         self.dispatcher = Dispatcher(self.fabric, self.master, self.overwatch)
+        self.dispatcher.tracer = self.tracer
         self.shipper = None
         if self._replica_fanout:
             from repro.core.replica import ReplicaShipper

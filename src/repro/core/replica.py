@@ -77,11 +77,13 @@ from repro.core.overwatch import OverwatchService, ReplicaState
 from repro.core.transport import DeliveryError, Envelope
 
 # The remote-read vocabulary: discovery, telemetry, queue depths, autoscaler
-# fleet state. Deliberately excludes the high-churn per-entity ``/jobs/``
+# fleet state, and per-cluster metrics snapshots (the flight recorder's
+# export — published only when ``metrics_every`` is set, so the prefix is
+# free otherwise). Deliberately excludes the high-churn per-entity ``/jobs/``
 # keyspace — placements/statuses are the dispatcher's (master-local) concern,
 # and shipping them to every cluster would be the fan-out's own traffic storm.
 REPLICA_PREFIXES: Tuple[str, ...] = ("/clusters/", "/telemetry/", "/queues/",
-                                     "/autoscale/")
+                                     "/autoscale/", "/metrics/")
 
 # Per-watcher pending-queue cap (RingLog discipline): generous enough that a
 # healthy watcher never sees it, small enough that a permanently raising

@@ -216,6 +216,12 @@ class Fabric:
         # wrapper) so it keeps observing through service rebuilds and counts
         # recovery traffic too (repro.core.faults arms it).
         self.on_deliver: Optional[Callable[[str, Address, Any], None]] = None
+        # trace-context stack: while a handler runs, the "trace" field of the
+        # payload being delivered (repro.observability.trace.TRACE_KEY) is on
+        # top, so a handler many hops from the sender — gateway relays
+        # included — can parent its spans via current_trace() without every
+        # intermediate service threading the context through its own API.
+        self._trace_ctx: List[Any] = []
 
     # ------------------------------------------------------------------- topology
     def register_handler(self, cluster: str, addr: Address,
@@ -276,6 +282,12 @@ class Fabric:
                        (self.clock + delay, next(self._timer_seq), cb))
 
     # -------------------------------------------------------------------- delivery
+    def current_trace(self) -> Optional[str]:
+        """The trace context of the message currently being delivered (the
+        ``"trace_id|span_id"`` string riding its payload), or ``None``.
+        Valid only inside a handler call; nested deliveries stack."""
+        return self._trace_ctx[-1] if self._trace_ctx else None
+
     def send(self, src_cluster: str, src_id: str, cluster: str, addr: Address,
              payload: Any, _hops: int = 0) -> Any:
         """Send from a component (pod/agent) to an in-cluster (ip, port).
@@ -359,7 +371,15 @@ class Fabric:
                 raise DeliveryError(f"no endpoint at {cluster}:{addr}")
             if self.on_deliver is not None:
                 self.on_deliver(cluster, addr, payload)
-            resp = handler(payload)
+            ctx = payload.get("trace") if isinstance(payload, dict) else None
+            if ctx is None:              # untraced message: zero extra work
+                resp = handler(payload)
+            else:
+                self._trace_ctx.append(ctx)
+                try:                     # finally: CrashError must still pop
+                    resp = handler(payload)
+                finally:
+                    self._trace_ctx.pop()
             if not need_rbytes:          # purely-local round trip: no walk
                 return resp, 0
             rbytes = _payload_bytes(resp)
@@ -385,7 +405,15 @@ class Fabric:
             raise DeliveryError(f"no endpoint at {cluster}:{addr}")
         if self.on_deliver is not None:
             self.on_deliver(cluster, addr, payload)
-        resp = handler(payload)
+        ctx = payload.get("trace") if isinstance(payload, dict) else None
+        if ctx is None:
+            resp = handler(payload)
+        else:
+            self._trace_ctx.append(ctx)
+            try:
+                resp = handler(payload)
+            finally:
+                self._trace_ctx.pop()
         if not need_rbytes:
             return resp, 0
         rbytes = _payload_bytes(resp)

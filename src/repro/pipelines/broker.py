@@ -129,7 +129,13 @@ TAG_EPOCH_STRIDE = 1_000_000_000
 class Broker:
     def __init__(self, clock_fn=None, lease: float = 30.0,
                  requeue_front: bool = False,
-                 durability=None, shard_name: str = "broker"):
+                 durability=None, shard_name: str = "broker",
+                 tracer=None):
+        # flight recorder: a "queue" span opens at push/requeue and closes at
+        # pull — the queue-wait segment of a task's trace. Set BEFORE the
+        # durability check below: WAL replay re-pushes messages and must
+        # re-open their spans (the pre-crash ones were truncated).
+        self.tracer = tracer
         self.queues: Dict[str, Deque[dict]] = {}
         # parallel to queues: per-message redelivered flags. Kept as a SEPARATE
         # aligned deque (not wrapped tuples) so queue entries stay the raw
@@ -196,6 +202,31 @@ class Broker:
             f.append(redelivered)
         self._inflight_count[queue] -= 1
         self._depth_dirty.add(queue)
+        self._trace_push(msg, redelivered=True)   # second queue-wait segment
+
+    # -------------------------------------------------------------- tracing
+    def _trace_push(self, msg, redelivered: bool = False,
+                    now=None) -> None:
+        """Open the queue-wait span for a traced message (no-op otherwise).
+        Keyed by (dag, task, try) so pull — or post-crash replay — closes the
+        same span; re-pushing an already-open key reuses it (no orphans).
+        Batch pushes pass ``now`` so the clock is read once per batch."""
+        tr = self.tracer
+        if tr is None or not isinstance(msg, dict) or "trace" not in msg:
+            return
+        tr.open_keyed(("queue", msg["dag"], msg["task"], msg["try"]),
+                      "queue", "broker", parent=msg["trace"],
+                      attrs={"redelivered": redelivered} if redelivered
+                      else None, t0=now)
+
+    def _trace_pull(self, msg, now=None) -> None:
+        """Close the queue-wait span at lease time (no-op when untraced,
+        already closed, or crash-truncated)."""
+        if self.tracer is None or not isinstance(msg, dict) \
+                or "trace" not in msg:
+            return
+        self.tracer.close_keyed(
+            ("queue", msg["dag"], msg["task"], msg["try"]), t1=now)
 
     # ------------------------------------------------------------- op helpers
     def _next_tag(self) -> int:
@@ -206,15 +237,20 @@ class Broker:
         self.queues.setdefault(queue, deque()).append(msg)
         self._flags.setdefault(queue, deque()).append(redelivered)
         self._depth_dirty.add(queue)
+        self._trace_push(msg, redelivered)
 
-    def _pull_one(self, queue: str) -> Optional[Tuple[dict, int, bool]]:
+    def _pull_one(self, queue: str,
+                  trace: bool = True) -> Optional[Tuple[dict, int, bool]]:
         q = self.queues.get(queue)
         if not q:
             return None
         item = q.popleft()
         flag = self._flags[queue].popleft()
+        now = self.clock_fn()
+        if trace:                        # pull_many batch-closes instead
+            self._trace_pull(item, now=now)
         tag = self._next_tag()
-        expires = self.clock_fn() + self.lease
+        expires = now + self.lease
         self.inflight[tag] = (queue, item, expires, flag)
         heapq.heappush(self._expiry_heap, (expires, tag))
         self._inflight_count[queue] += 1
@@ -269,6 +305,14 @@ class Broker:
             self._flags.setdefault(msg["queue"], deque()).extend(
                 redel for _ in msg["msgs"])
             self._depth_dirty.add(msg["queue"])
+            if self.tracer is not None:
+                ra = {"redelivered": True} if redel else None
+                items = [(("queue", m["dag"], m["task"], m["try"]),
+                          m["trace"], ra)
+                         for m in msg["msgs"] if "trace" in m]
+                if items:                # one call for the whole batch
+                    self.tracer.open_keyed_many(items, "queue", "broker",
+                                                self.clock_fn())
             if self._dur is not None:
                 self._dur.append(self._shard,
                                  ("pushN", msg["queue"], msg["msgs"], redel))
@@ -289,12 +333,17 @@ class Broker:
             tags: List[int] = []
             flags: List[bool] = []
             for _ in range(max(int(msg.get("max_n", 1)), 0)):
-                got = self._pull_one(msg["queue"])
+                got = self._pull_one(msg["queue"], trace=False)
                 if got is None:
                     break
                 msgs.append(got[0])
                 tags.append(got[1])
                 flags.append(got[2])
+            if self.tracer is not None and msgs:
+                keys = [("queue", m["dag"], m["task"], m["try"])
+                        for m in msgs if "trace" in m]
+                if keys:                 # one close for the whole batch
+                    self.tracer.close_keyed_many(keys, self.clock_fn())
             if tags and self._dur is not None:
                 self._dur.append(self._shard, ("pullN", msg["queue"], tags))
             resp = {"ok": True, "msgs": msgs, "tags": tags}
@@ -373,9 +422,10 @@ class Broker:
             for tag in rec[2]:
                 if not q:
                     break
-                self.inflight[tag] = (rec[1], q.popleft(), 0.0,
-                                      flags.popleft())
+                m = q.popleft()
+                self.inflight[tag] = (rec[1], m, 0.0, flags.popleft())
                 self._inflight_count[rec[1]] += 1
+                self._trace_pull(m)
         elif kind == "ack":
             self._ack_one(rec[1])
         elif kind == "nack":

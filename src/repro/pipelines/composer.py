@@ -117,10 +117,24 @@ class HybridComposer:
                  durability=None,
                  wal_snapshot_every: int = 8192,
                  cost_aware: bool = False,
-                 step_cache: int = 4):
+                 step_cache: int = 4,
+                 trace_sample: float = 0.0,
+                 tracer=None):
         self.plane = plane
         self.worker_batch = worker_batch
         self.pipelined = pipelined
+        # flight recorder: an explicit tracer wins, else trace_sample > 0
+        # creates one on the fabric clock, else the plane's own (if any).
+        # No tracer anywhere => no "trace" keys ever attached => every fabric
+        # payload is byte-identical to the uninstrumented plane.
+        if tracer is not None:
+            self.tracer = tracer
+        elif trace_sample > 0:
+            from repro.observability.trace import Tracer
+            self.tracer = Tracer(clock_fn=lambda: plane.fabric.clock,
+                                 sample=trace_sample)
+        else:
+            self.tracer = getattr(plane, "tracer", None)
         # roofline-cost-aware queue routing (repro.roofline.cost): priced
         # tasks gain their steering capability tag in the queue name, so
         # compute-bound stages route to accelerator-tier workers and IO-bound
@@ -176,7 +190,8 @@ class HybridComposer:
         fabric = self.plane.fabric
         master_state = self.plane.master_agent.state
         self.brokers = [Broker(clock_fn=lambda: fabric.clock,
-                               durability=self.durability, shard_name=sname)
+                               durability=self.durability, shard_name=sname,
+                               tracer=self.tracer)
                         for sname in self._broker_services]
         self.broker = self.brokers[0]   # single-shard accessor (tests, back-compat)
         self.taskdb = TaskDB(durability=self.durability)
@@ -189,7 +204,41 @@ class HybridComposer:
         self.scheduler = Scheduler(sched_client, clock_fn=lambda: fabric.clock,
                                    batched=self.pipelined,
                                    broker_for=self.router.service_for_queue,
-                                   cost_aware=self.cost_aware)
+                                   cost_aware=self.cost_aware,
+                                   tracer=self.tracer)
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Adopt the pipeline's legacy stats dicts into the master agent's
+        metrics registry under stable dotted names. Sources late-bind through
+        ``self`` (``self.brokers[i]``, ``self.taskdb``, ``self.autoscaler``),
+        so a crash-recovery rebuild needs no re-registration — the next
+        snapshot reads the fresh objects."""
+        reg = getattr(self.plane.master_agent, "metrics", None)
+        if reg is None:
+            return
+        for i, sname in enumerate(self._broker_services):
+            def broker_stats(i=i):
+                b = self.brokers[i]
+                out = dict(b.stats)
+                out.update({f"ops.{k}": v for k, v in b.op_counts.items()})
+                return out
+            reg.register_source(f"broker.{sname}", broker_stats)
+        reg.register_source("taskdb",
+                            lambda: dict(self.taskdb.op_counts))
+        reg.register_source("autoscale", self._autoscale_metrics)
+        if self.tracer is not None:
+            reg.register_source("trace",
+                                lambda: dict(self.tracer.stats))
+
+    def _autoscale_metrics(self) -> dict:
+        a = self.autoscaler
+        if a is None:
+            return {}
+        out = {"events": a.events.total_appended}
+        for family, pods in a.pods.items():
+            out[f"pods.{family}"] = len(pods)
+        return out
 
     def _make_worker(self, name: str, cluster: str,
                      queues: Tuple[str, ...]) -> PipelineWorker:
@@ -201,7 +250,18 @@ class HybridComposer:
             batch=self.worker_batch, pipelined=self.pipelined,
             broker_for=self.router.service_for_queue,
             depth_hint=self._depth_hint_for(agent),
-            step_cache=self.step_cache)
+            step_cache=self.step_cache, tracer=self.tracer,
+            metrics=getattr(agent, "metrics", None))
+        reg = getattr(agent, "metrics", None)
+        if reg is not None:
+            def worker_stats(w=worker):
+                out = {"executed": w.executed, "deduped": w.deduped,
+                       "skipped_pulls": w.skipped_pulls}
+                if w._trainer_cache is not None:
+                    out.update({f"step_cache.{k}": v for k, v
+                                in w._trainer_cache.stats().items()})
+                return out
+            reg.register_source(f"worker.{name}", worker_stats)
         if self.worker_setup is not None:
             self.worker_setup(worker)
         self.workers.append(worker)
@@ -358,6 +418,15 @@ class HybridComposer:
 
         Workers on partitioned clusters are skipped wherever they are
         unreachable and converge after heal via lease expiry + redelivery."""
+        if self.tracer is not None:
+            # spans owned by the crashed master's components truncate at the
+            # recovery epoch BEFORE the rebuild: WAL replay inside the fresh
+            # brokers re-opens queue spans under the same keys, so the order
+            # is load-bearing (truncate-after would kill the replayed spans).
+            # Task ROOT spans and worker execute/commit spans live on — roots
+            # still close at the terminal row, worker commit spans when the
+            # retried commit's acks land.
+            self.tracer.truncate_open(components=("scheduler", "broker"))
         self._build_master_services()
         for dag in self._dags.values():
             self.scheduler.add_dag(dag)
@@ -419,9 +488,14 @@ class HybridComposer:
                 status = (row or {}).get("status")
                 if status in ("queued", "running"):
                     if (did, name, row["try"]) not in held:
+                        m = Scheduler.build_message(did, task, row["try"])
+                        if self.tracer is not None:
+                            # re-attach to the surviving root span, if traced
+                            ctx = self.tracer.ctx_for(("task", did, name))
+                            if ctx is not None:
+                                m["trace"] = ctx
                         pushes.setdefault(
-                            queue_for(task, self.cost_aware), []).append(
-                            Scheduler.build_message(did, task, row["try"]))
+                            queue_for(task, self.cost_aware), []).append(m)
                         reseeded += 1
                 elif row is None and (did, name) in held_tasks:
                     self.scheduler.note_inflight(did, name)

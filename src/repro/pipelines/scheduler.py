@@ -55,11 +55,23 @@ def queue_for(task: Task, cost_aware: bool = False) -> str:
 class Scheduler:
     def __init__(self, client: ServiceClient, clock_fn=None,
                  batched: bool = True, broker_for=None,
-                 cost_aware: bool = False):
+                 cost_aware: bool = False, tracer=None):
         self.client = client
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.batched = batched
+        # flight recorder: when set (and the task samples), _stage opens the
+        # task's ROOT span plus a "schedule" child and rides the context on
+        # the broker message; the root closes when _apply_rows observes the
+        # terminal taskdb row — the scheduler is the one component that sees
+        # both birth and death of every task instance
+        self.tracer = tracer
+        self._staged_spans: List = []
+        # partial sampling: every round(1/sample)-th staged task traces
+        self._stage_n = 0
+        self._stride = (max(1, round(1.0 / tracer.sample))
+                        if tracer is not None and 0.0 < tracer.sample < 1.0
+                        else 0)
         # roofline-cost-aware queue routing; False is byte-identical to the
         # depth-aware-only plane (asserted by test_workloads equivalence)
         self.cost_aware = cost_aware
@@ -111,6 +123,11 @@ class Scheduler:
         candidates = self._candidates[did]
         undone = self._undone_up[did]
         retry = self._retry_pending[did]
+        tr = self.tracer
+        # root spans close at terminal rows — collected here, closed in two
+        # batch calls (one clock read) after the fold
+        closed_ok: List[tuple] = []
+        closed_failed: List[tuple] = []
         for t, r in changed.items():
             if t not in dag.tasks:
                 continue
@@ -125,6 +142,8 @@ class Scheduler:
                 # a retry can outrace a same-tick upstream_failed mark; the
                 # success row wins (it is the higher try), so the sets agree
                 failed.discard(t)
+                if tr is not None:
+                    closed_ok.append(("task", did, t))
                 for d in dag.children[t]:
                     undone[d] -= 1
                     if undone[d] == 0 and d not in done and d not in failed:
@@ -144,12 +163,22 @@ class Scheduler:
                     candidates.discard(t)
                     retry.pop(t, None)
                     self._fail_new[did].add(t)
+                    if tr is not None:
+                        closed_failed.append(("task", did, t))
             elif s == "upstream_failed":
                 running.discard(t)
                 candidates.discard(t)
                 retry.pop(t, None)
                 if t not in done:
                     failed.add(t)
+                    if tr is not None:
+                        closed_failed.append(("task", did, t))
+        if closed_ok or closed_failed:
+            tnow = tr.clock()
+            if closed_ok:
+                tr.close_keyed_many(closed_ok, tnow)
+            if closed_failed:
+                tr.close_keyed_many(closed_failed, tnow, status="failed")
 
     def _probe(self) -> Dict[str, Dict[str, dict]]:
         """One multiplexed delta round-trip for every registered DAG."""
@@ -231,8 +260,28 @@ class Scheduler:
                rows: List[dict], pushes: Dict[str, List[dict]]) -> None:
         rows.append({"dag": did, "task": task.name, "try": try_n,
                      "status": "queued", "clock": clock})
-        pushes.setdefault(queue_for(task, self.cost_aware), []).append(
-            self.build_message(did, task, try_n))
+        msg = self.build_message(did, task, try_n)
+        tr = self.tracer
+        if tr is not None:
+            s = tr.sample
+            if s >= 1.0:
+                tid = f"{did}/{task.name}"
+            elif s <= 0.0:
+                tid = None
+            else:
+                # deterministic stride sampling: the sim stages tasks in a
+                # deterministic order, so the same workload traces the same
+                # tasks on every run — and the unsampled hot path pays one
+                # int op instead of an f-string + checksum per task
+                n = self._stage_n = self._stage_n + 1
+                tid = f"{did}/{task.name}" if n % self._stride == 0 else None
+            if tid:
+                # keyed root: a retry re-stage reuses the surviving root span
+                ctx = tr.open_keyed(("task", did, task.name), "task", "task",
+                                    trace_id=tid, t0=clock)
+                self._staged_spans.append((ctx, clock))
+                msg["trace"] = ctx      # downstream spans parent under root
+        pushes.setdefault(queue_for(task, self.cost_aware), []).append(msg)
 
     @staticmethod
     def build_message(did: str, task: Task, try_n: int) -> dict:
@@ -265,13 +314,25 @@ class Scheduler:
                 self.client.call(self.broker_for(queue),
                                  {"op": "push_many", "queue": queue,
                                   "msgs": pushes[queue]})
-            return
-        for row in rows:
-            self.client.call("taskdb", {"op": "upsert", **row})
-        for queue in sorted(pushes):
-            for m in pushes[queue]:
-                self.client.call(self.broker_for(queue),
-                                 {"op": "push", "queue": queue, "msg": m})
+        else:
+            for row in rows:
+                self.client.call("taskdb", {"op": "upsert", **row})
+            for queue in sorted(pushes):
+                for m in pushes[queue]:
+                    self.client.call(self.broker_for(queue),
+                                     {"op": "push", "queue": queue, "msg": m})
+        # schedule spans are recorded once the placement RPCs land; a crash
+        # mid-flush drops the staged tuples with the dead scheduler — the
+        # aborted attempt never hits the tracer, and the post-recovery
+        # re-stage records the one schedule span that actually committed
+        if self._staged_spans:
+            tr = self.tracer
+            t1 = tr.clock()              # one read for the whole batch
+            rec = tr.rec                 # raw event appends, one bound check
+            for ctx, t0 in self._staged_spans:
+                rec((None, ctx, "schedule", "scheduler", t0, t1, "ok", None))
+            tr.bound()
+            self._staged_spans = []
 
     # ------------------------------------------------------------------ observation
     def dag_status(self, dag_id: str) -> Dict[str, str]:

@@ -76,6 +76,7 @@ still volatile when the master died.
 """
 from __future__ import annotations
 
+import time
 import traceback
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
@@ -141,9 +142,18 @@ class PipelineWorker:
                  = None,
                  broker_for: Optional[Callable[[str], str]] = None,
                  depth_hint: Optional[Callable[[str], int]] = None,
-                 step_cache: int = 4):
+                 step_cache: int = 4, tracer=None, metrics=None):
         self.client = client
         self.pod = pod
+        # flight recorder: traced messages get an "execute" span around the
+        # handler and a "commit" span that stays open until the batch's acks
+        # land (a master-crash-interrupted commit retries verbatim, and its
+        # spans close when the retry commits — worker spans never truncate);
+        # ``metrics`` records per-queue-family service-time histograms at ack
+        # time (the predictive autoscaler's future input), sampled or not
+        self.tracer = tracer
+        self.metrics = metrics
+        self._pending_trace: List[tuple] = []   # (queue, wall_s, commit_span)
         self.queues = tuple(queues)
         self.handlers = dict(DEFAULT_HANDLERS)
         # warm-worker compiled-step cache: train/eval/serve handlers reuse a
@@ -175,8 +185,9 @@ class PipelineWorker:
         self.deduped = 0                # flagged redeliveries skipped as done
         self.state = "running"          # running | draining | drained
         self.on_drained = on_drained
-        # leased, uncommitted: (msg, tag, broker service, redelivered flag)
-        self._inflight: List[Tuple[dict, int, str, bool]] = []
+        # leased, uncommitted: (msg, tag, broker service, redelivered flag,
+        # queue name)
+        self._inflight: List[Tuple[dict, int, str, bool, str]] = []
         # executed but not yet successfully committed: (rows, acks, executed)
         self._pending_commit: Optional[tuple] = None
         # resync ring: terminal rows this worker produced, re-upserted at the
@@ -252,7 +263,7 @@ class PipelineWorker:
             tags = resp.get("tags") or []
             flags = resp.get("redelivered") or [False] * len(msgs)
             self._inflight.extend(
-                (m, t, svc, f) for m, t, f in zip(msgs, tags, flags))
+                (m, t, svc, f, queue) for m, t, f in zip(msgs, tags, flags))
             pulled += len(msgs)
         return pulled
 
@@ -282,13 +293,16 @@ class PipelineWorker:
             acks: Dict[str, List[int]] = {}  # broker service -> leased tags
             executed: List[str] = []
             seen: set = set()
-            for msg, tag, svc, redel in batch:
+            # one clock read covers the batch: execution is instantaneous in
+            # simulated time (the clock only advances between ticks)
+            tnow = self.tracer.clock() if self.tracer is not None else 0.0
+            for msg, tag, svc, redel, queue in batch:
                 key = (msg["dag"], msg["task"], msg["try"])
                 if (redel and key in done) or key in seen:
                     self.deduped += 1        # already ran (here or elsewhere)
                 else:
                     seen.add(key)
-                    pair = self._run(msg)
+                    pair = self._run_traced(msg, queue, tnow)
                     rows.extend(pair)
                     self.recent_rows.append(pair[-1])
                     executed.append(f"{msg['dag']}.{msg['task']}")
@@ -300,14 +314,68 @@ class PipelineWorker:
         for svc in sorted(acks):
             self.client.call(svc, {"op": "ack_many", "tags": acks[svc]})
         self._pending_commit = None
+        self._finish_commit_trace()
         return executed
+
+    def _run_traced(self, msg: dict, queue: str, tnow: float) -> List[dict]:
+        """``_run`` plus flight-recorder bookkeeping: the outcome of the
+        "execute" span (with the task's step EMA when the runtime reports
+        one) and the start of the "commit" span are STASHED, not recorded —
+        ``_finish_commit_trace`` appends both once this batch's acks land,
+        so after a master crash the stashed batch retries verbatim and its
+        spans are recorded exactly once, by the attempt that commits. The
+        execution wall time is stashed alongside for the service-time
+        histogram, traced or not. ``tnow`` is the batch's single clock read
+        — execution is instantaneous in simulated time (the clock only
+        advances between ticks); its real cost rides in the ``wall_s``
+        attr."""
+        w0 = time.perf_counter()
+        pair = self._run(msg)
+        wall = time.perf_counter() - w0
+        ctx = msg.get("trace") if self.tracer is not None else None
+        if ctx is not None:
+            terminal = pair[-1]
+            res = terminal.get("result")
+            ema = (res.get("step_ema_s")
+                   if isinstance(res, dict) else None)    # StepTimer's EMA
+            st = "ok" if terminal["status"] == "success" else "failed"
+        else:
+            ema, st = None, "ok"
+        self._pending_trace.append((queue, wall, ctx, tnow, st, ema))
+        return pair
+
+    def _finish_commit_trace(self) -> None:
+        """The batch's acks landed: record each task's service time into the
+        per-queue-family histogram and its execute/commit span pair — raw
+        event appends, one clock read and one bound check per batch."""
+        if not self._pending_trace:
+            return
+        pt, self._pending_trace = self._pending_trace, []
+        tr = self.tracer
+        metrics = self.metrics
+        if tr is None:
+            if metrics is not None:
+                for queue, wall, _ctx, _t0, _st, _ema in pt:
+                    metrics.observe(f"pipeline.service_time.{queue}", wall)
+            return
+        t1 = tr.clock()                  # one read per batch
+        rec = tr.rec
+        for queue, wall, ctx, t0, st, ema in pt:
+            if metrics is not None:
+                metrics.observe(f"pipeline.service_time.{queue}", wall)
+            if ctx is not None:
+                a = ({"wall_s": wall} if ema is None
+                     else {"wall_s": wall, "step_ema_s": ema})
+                rec((None, ctx, "execute", "worker", t0, t0, st, a))
+                rec((None, ctx, "commit", "worker", t0, t1, "ok", None))
+        tr.bound()
 
     def _probe_terminal(self, batch) -> set:
         """(dag, task, try) keys among the batch's FLAGGED messages that the
         taskdb already shows terminal — one ``status_many`` RPC, only issued
         when at least one message carries the redelivered flag."""
         flagged = [(m["dag"], m["task"], m["try"])
-                   for m, _, _, redel in batch if redel]
+                   for m, _, _, redel, _ in batch if redel]
         if not flagged:
             return set()
         resp = self.client.call("taskdb", {
@@ -387,25 +455,36 @@ class PipelineWorker:
             msg = resp.get("msg")
             if msg is None:
                 continue
-            self._execute(msg, resp.get("tag"), svc)
+            self._execute(msg, resp.get("tag"), svc, queue)
             return f"{msg['dag']}.{msg['task']}"
         return None
 
-    def _execute(self, msg: dict, tag, svc: str = "broker") -> None:
+    def _execute(self, msg: dict, tag, svc: str = "broker",
+                 queue: Optional[str] = None) -> None:
         key = {"dag": msg["dag"], "task": msg["task"], "try": msg["try"]}
         self.client.call("taskdb", {"op": "upsert", **key, "status": "running",
                                     "worker": self.pod,
                                     "clock": self.clock_fn()})
         fn = self.handlers.get(msg["kind"])
+        tr = self.tracer
+        ctx = msg.get("trace") if tr is not None else None
+        ts0 = tr.clock() if ctx is not None else 0.0
+        t0 = time.perf_counter()
+        ok = True
         try:
             if fn is None:
                 raise KeyError(f"no handler for kind {msg['kind']!r}")
             result = fn(dict(msg.get("payload") or {}))
+            if ctx is not None:
+                tr.span_complete(ctx, "execute", "worker", ts0)
             self.client.call("taskdb", {"op": "upsert", **key,
                                         "status": "success", "result": result,
                                         "worker": self.pod,
                                         "clock": self.clock_fn()})
         except Exception as e:                               # noqa: BLE001
+            ok = False
+            if ctx is not None:
+                tr.span_complete(ctx, "execute", "worker", ts0, "failed")
             self.client.call("taskdb", {
                 "op": "upsert", **key, "status": "failed",
                 "error": f"{type(e).__name__}: {e}",
@@ -413,4 +492,11 @@ class PipelineWorker:
             traceback.print_exc()
         finally:
             self.executed += 1
+            tc0 = tr.clock() if ctx is not None else 0.0
             self.client.call(svc, {"op": "ack", "tag": tag})
+            if self.metrics is not None and queue is not None:
+                self.metrics.observe(f"pipeline.service_time.{queue}",
+                                     time.perf_counter() - t0)
+            if ctx is not None:
+                tr.span_complete(ctx, "commit", "worker", tc0,
+                                 "ok" if ok else "failed")

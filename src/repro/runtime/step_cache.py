@@ -125,7 +125,11 @@ def run_train_task(cache: Optional[TrainerCache], payload: dict) -> dict:
     ran = max(cfg.steps - tr.step, 0)
     m = tr.run(ran) if ran else {}
     out = {"steps": tr.step, "loss": m.get("loss", tr.loss()),
-           "ran_steps": ran, "resumed_from": resumed}
+           "ran_steps": ran, "resumed_from": resumed,
+           # StepTimer's EMA step wall time: the flight recorder folds it
+           # into the task's execute span so a trace shows not just how long
+           # a train task took but how fast its steps were going
+           "step_ema_s": tr.timer.ema_s}
     if cfg.checkpoint_dir:
         out["checkpoint"] = tr.save_checkpoint()
     return out

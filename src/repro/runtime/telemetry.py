@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -47,9 +48,17 @@ class StepTimer:
 
 @dataclasses.dataclass
 class MetricsLog:
-    """Bounded in-memory metrics ring (examples/tests read loss curves off it)."""
+    """Bounded in-memory metrics ring (examples/tests read loss curves off it).
+
+    The ring is a ``deque(maxlen=capacity)``: append past capacity evicts the
+    oldest row in O(1) instead of the old list's O(n) front-slice on every
+    overflowing append."""
     capacity: int = 4096
-    rows: List[dict] = dataclasses.field(default_factory=list)
+    rows: Deque = None
+
+    def __post_init__(self):
+        # maxlen depends on the capacity field, so it can't be a field default
+        self.rows = deque(self.rows or (), maxlen=self.capacity)
 
     def log(self, step: int, metrics: Dict[str, float]) -> None:
         row = {"step": step}
@@ -59,8 +68,6 @@ class MetricsLog:
             except (TypeError, ValueError):
                 pass
         self.rows.append(row)
-        if len(self.rows) > self.capacity:
-            del self.rows[: len(self.rows) - self.capacity]
 
     def latest(self) -> Optional[dict]:
         return self.rows[-1] if self.rows else None

@@ -1,0 +1,252 @@
+"""Flight recorder: trace propagation over the fabric, span-exactness across
+broker shards, crash/partition truncation (never leaks, never double-closes),
+byte-identity when sampling is off, the unified metrics registry, and the
+zero-cross-boundary /metrics/ export over the replica delta feed."""
+from collections import Counter
+
+import pytest
+
+from repro.core.durability import LogStore
+from repro.core.faults import ChaosHarness, FaultPlan, FaultPoint
+from repro.core.plane import ManagementPlane, SimLocalPlane
+from repro.observability import (MetricsRegistry, Tracer, critical_path,
+                                 format_trace_report)
+from repro.pipelines import DAG, HybridComposer, Task
+from repro.runtime.telemetry import MetricsLog
+
+SPAN_NAMES = {"task", "schedule", "queue", "execute", "commit"}
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_counters_gauges_histograms_and_sources():
+    reg = MetricsRegistry("master")
+    reg.inc("fabric.sends")
+    reg.inc("fabric.sends", 4)
+    reg.set_gauge("pool.size", 3)
+    for ms in (1, 2, 3, 4, 100):
+        reg.observe("svc.latency", ms / 1000.0)
+    reg.register_source("broker.b0", lambda: {"pushes": 7})
+    snap = reg.snapshot()
+    assert snap["fabric.sends"] == 5
+    assert snap["pool.size"] == 3
+    assert snap["broker.b0.pushes"] == 7
+    assert snap["svc.latency.count"] == 5
+    # p50 lands in the low-millisecond buckets, p99 must see the outlier
+    assert snap["svc.latency.p50"] <= 0.01
+    assert snap["svc.latency.p99"] >= 0.05
+    assert snap["svc.latency.max"] == pytest.approx(0.1)
+    # re-registering a prefix overwrites (recovery re-registers freely)
+    reg.register_source("broker.b0", lambda: {"pushes": 9})
+    assert reg.snapshot()["broker.b0.pushes"] == 9
+    # a failing source is skipped and counted, never raises out of snapshot
+    reg.register_source("bad", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert not any(k.startswith("bad") for k in snap)
+    assert reg.source_errors["bad"] == 1
+    assert "svc" in reg.sections() and "broker" in reg.sections()
+
+
+def test_histogram_empty_and_single_value():
+    reg = MetricsRegistry()
+    assert reg.snapshot() == {}
+    reg.observe("h", 0.5)
+    s = reg.snapshot()
+    assert s["h.count"] == 1
+    assert s["h.min"] == s["h.max"] == pytest.approx(0.5)
+    # quantiles are clamped to the observed range
+    assert s["h.p50"] == pytest.approx(0.5)
+    assert s["h.p99"] == pytest.approx(0.5)
+
+
+def test_metricslog_ring_is_bounded():
+    log = MetricsLog(capacity=16)
+    for i in range(50):
+        log.log(i, {"loss": float(i)})
+    assert len(log.rows) == 16
+    assert [r["step"] for r in log.rows] == list(range(34, 50))
+    assert log.series("loss") == [float(i) for i in range(34, 50)]
+
+
+# ---------------------------------------------------------- trace over fabric
+def _traced_plane(**kw):
+    plane = ManagementPlane(trace_sample=1.0, **kw)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.add_cluster("onprem-b", local_plane=SimLocalPlane(caps=("cpu",)))
+    return plane
+
+
+def test_trace_ctx_crosses_gateway_relay():
+    """A dispatch to a remote cluster carries its trace ctx across the
+    fabric hop: the receiving agent's accept span joins the SAME trace as
+    the dispatcher's job root, parented under the dispatch span."""
+    plane = _traced_plane()
+    jid = plane.submit_job("sim", steps=5, tags={"requires": ("cpu",)})
+    assert plane.run_until_done([jid], max_ticks=100)
+    tr = plane.tracer
+    spans = tr.trace(f"job/{jid}")
+    by_name = {s.name: s for s in spans}
+    assert {"job", "dispatch", "accept"} <= set(by_name)
+    # one shared trace_id end to end
+    assert len({s.trace_id for s in spans}) == 1
+    # accept ran on the remote agent, parented under the dispatch hop
+    assert by_name["accept"].parent_id == by_name["dispatch"].span_id
+    assert by_name["accept"].attrs["cluster"] != "master"
+    assert by_name["dispatch"].parent_id == by_name["job"].span_id
+    assert not by_name["job"].open and by_name["job"].status == "ok"
+    assert tr.accounting_ok() and tr.open_count == 0
+
+
+def _pipeline(n_tasks=12, trace_sample=0.0, tracer=None, broker_shards=1,
+              durability=None, plane=None):
+    if plane is None:
+        plane = ManagementPlane(durability=durability)
+        plane.add_cluster("master", is_master=True,
+                          local_plane=SimLocalPlane(caps=("control",)))
+        plane.add_cluster("onprem-a",
+                          local_plane=SimLocalPlane(caps=("cpu",)))
+        plane.add_cluster("cloud-a",
+                          local_plane=SimLocalPlane(caps=("cpu",)))
+    comp = HybridComposer(plane,
+                          workers={"onprem-a": ["w0"], "cloud-a": ["w1"]},
+                          broker_shards=broker_shards,
+                          durability=durability,
+                          trace_sample=trace_sample, tracer=tracer)
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python")
+                           for i in range(n_tasks)]))
+    return plane, comp
+
+
+def test_every_task_gets_exactly_five_spans_across_broker_shards():
+    """Sharded brokers fan the queue spans out across shard WALs; each task
+    still gets exactly one {task, schedule, queue, execute, commit} set —
+    no lost spans, no duplicates, nothing left open."""
+    plane, comp = _pipeline(n_tasks=12, trace_sample=1.0, broker_shards=3)
+    assert comp.run_dag("d", max_ticks=200)
+    tr = comp.tracer
+    for i in range(12):
+        spans = tr.trace(f"d/t{i}")
+        names = sorted(s.name for s in spans)
+        assert names == sorted(SPAN_NAMES), f"t{i}: {names}"
+        assert all(not s.open and s.status == "ok" for s in spans)
+    assert tr.open_count == 0 and tr.accounting_ok()
+    assert tr.stats["opened"] == 12 * 5
+    assert tr.stats["double_close"] == 0
+    # critical path decomposes the root into its lifecycle segments
+    cp = critical_path(tr, "d/t0")
+    assert cp["status"] == "ok" and cp["total"] >= 0
+    assert {"schedule", "queue", "execute", "commit"} <= set(cp["segments"])
+    assert cp["dominant"] in SPAN_NAMES - {"task"}
+    assert format_trace_report(tr)           # renders without blowing up
+
+
+def test_sampling_off_is_byte_identical_and_spanless():
+    """sample=0.0 attaches no trace keys: every fabric byte/op counter is
+    identical to a tracer-less run, and zero spans are recorded."""
+    results = []
+    for tracer in (None, Tracer(sample=0.0)):
+        plane, comp = _pipeline(n_tasks=10, tracer=tracer)
+        assert comp.run_dag("d", max_ticks=200)
+        results.append(dict(plane.fabric.stats))
+    assert results[0] == results[1]
+    plane, comp = _pipeline(n_tasks=10, tracer=Tracer(sample=0.0))
+    assert comp.run_dag("d", max_ticks=200)
+    assert comp.tracer.stats["opened"] == 0
+    assert not comp.tracer.spans
+
+
+def test_crash_restart_truncates_spans_never_leaks():
+    """Spans open at the moment of a master crash (staged schedules, queued
+    tasks) are TRUNCATED by recovery, then re-opened by WAL replay; the
+    accounting identity opened == closed + truncated + open holds with zero
+    double-closes and nothing left open at the end."""
+    dur = LogStore()
+    plane, comp = _pipeline(n_tasks=60, trace_sample=1.0, broker_shards=2,
+                            durability=dur)
+    h = ChaosHarness(plane, comp, FaultPlan.crash_at_ops(10, 20),
+                     downtime_ticks=2)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    assert h.crashes == 2
+    tr = comp.tracer
+    assert tr.accounting_ok()
+    assert tr.stats["double_close"] == 0
+    assert tr.open_count == 0
+    # roots survive the crash: every task trace still closes "ok"
+    for i in range(60):
+        root = [s for s in tr.trace(f"d/t{i}") if s.name == "task"]
+        assert len(root) == 1 and root[0].status == "ok"
+
+
+def test_partition_heal_keeps_spans_balanced():
+    plane, comp = _pipeline(n_tasks=40, trace_sample=1.0)
+    plan = FaultPlan([
+        FaultPoint(action="partition", cluster="cloud-a", at_op=4),
+        FaultPoint(action="heal", cluster="cloud-a", at_op=14),
+    ])
+    h = ChaosHarness(plane, comp, plan)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=400)
+    tr = comp.tracer
+    assert tr.open_count == 0 and tr.accounting_ok()
+    assert tr.stats["double_close"] == 0
+
+
+# -------------------------------------------------------------- /metrics/ ex
+def test_metrics_export_rides_replica_feed_zero_cross_reads():
+    """Agents snapshot their registries under /metrics/<cluster>/... which
+    the PR 7 shipper fans out; any cluster then reads the whole fleet's
+    metrics via range_stale at zero cross-boundary cost."""
+    plane = ManagementPlane(coalesce_watches=True, replica_fanout=True,
+                            trace_sample=1.0, metrics_every=0.5)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    comp = HybridComposer(plane,
+                          workers={"onprem-a": ["w0"], "cloud-a": ["w1"]},
+                          worker_queues={"w0": ("default",),
+                                         "w1": ("default",)})
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="python")
+                           for i in range(16)]))
+    assert comp.run_dag("d", max_ticks=200)
+    plane.tick(n=3)                         # let publication + ship settle
+    agent = plane.agents["onprem-a"]
+    items = dict(agent.ow.range_stale("/metrics/", max_lag=10.0))
+    assert any(k.startswith("/metrics/master/fabric") for k in items)
+    # per-queue-family service time, recorded at ack time on the worker
+    svc = {k: v for k, v in items.items()
+           if "pipeline" in k and any("service_time" in m for m in v)}
+    assert svc, f"no service-time section in {sorted(items)}"
+    sect = next(iter(svc.values()))
+    assert sect["service_time.default.count"] >= 1
+    assert "service_time.default.p50" in sect
+    assert "service_time.default.p99" in sect
+    # satellite (b): registry fabric section agrees with the live counters
+    fab = items["/metrics/master/fabric"]
+    assert 0 < fab["cross_cluster_bytes"] <= \
+        plane.fabric.cross_cluster_bytes()
+    # replica watch counters surface through the same registry
+    rep_keys = [k for k in items if "/replica" in k]
+    assert rep_keys, f"no replica section in {sorted(items)}"
+    # the read itself crossed no boundary: repeating it moves zero bytes
+    cross = plane.fabric.cross_cluster_bytes()
+    again = dict(agent.ow.range_stale("/metrics/", max_lag=10.0))
+    assert plane.fabric.cross_cluster_bytes() == cross
+    assert again.keys() == items.keys()
+
+
+def test_metrics_export_off_by_default_ships_nothing():
+    plane = ManagementPlane(coalesce_watches=True, replica_fanout=True)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.tick(n=5)
+    agent = plane.agents["onprem-a"]
+    assert not agent.ow.range_stale("/metrics/", max_lag=10.0)
+
+
+def test_trace_off_records_nothing_on_the_plane():
+    plane = ManagementPlane()
+    plane.add_cluster("master", is_master=True)
+    assert plane.tracer is None
+    assert plane.agents["master"].tracer is None
