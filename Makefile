@@ -46,7 +46,7 @@ bench-check:
 # wall-clock ratio (observability:overhead_wall) only runs in the full
 # `make bench-check`
 bench-check-ci:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery workloads:overhead observability:overhead
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check pipeline_plane autoscale control_plane:locality control_plane:notify durability:recovery durability:migration workloads:overhead observability:overhead
 
 # the flight recorder's human view: critical-path decomposition of the
 # slowest trace on a freshly traced DAG (queue-wait vs execute vs commit)

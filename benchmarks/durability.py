@@ -158,6 +158,132 @@ def _matrix(n_tasks: int) -> List[dict]:
     ]
 
 
+# ------------------------------------------------------------- multi-master
+def run_migration_chaos(name: str, n_tasks: int,
+                        plan: Optional[FaultPlan] = None,
+                        migrations: tuple = (),
+                        warmup_ticks: int = 3) -> dict:
+    """One multi-master scenario: three master fault domains owning one
+    overwatch shard + two broker shards behind the epoch-fenced shard map,
+    with scripted live migrations and/or ``kill_master`` fault points fired
+    mid-backlog. Alongside the exactly-once accounting this records the
+    migration ledger: the unavailability window (coordinator frozen ticks),
+    and how many operations bounced off a fence and were retried (stale-epoch
+    rejections + frozen-broker bounces + scheduler push re-stashes). All
+    deterministic counts — wall seconds are the only host-dependent field."""
+    dur = LogStore()
+    plane = ManagementPlane(durability=dur, num_masters=3,
+                            message_log_limit=1_000, op_log_limit=1_000)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a",
+                      local_plane=SimLocalPlane(caps=("cpu", "onprem")))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    counts: Counter = Counter()
+
+    def setup(worker):
+        worker.register(
+            "count", lambda p, _c=counts: {"n": _c.update([p["i"]]) or 1})
+
+    half = STATIC_FLEET // 2
+    comp = HybridComposer(
+        plane,
+        workers={"onprem-a": [f"ws-{i}" for i in range(half)],
+                 "cloud-a": [f"ws-{i + half}" for i in range(half)]},
+        worker_batch=WORKER_BATCH, durability=dur, broker_shards=2,
+        worker_setup=setup)
+    comp.add_dag(DAG("backlog", [Task(f"t{i}", kind="count",
+                                      payload={"i": i})
+                                 for i in range(n_tasks)]))
+
+    harness = ChaosHarness(plane, comp, plan or FaultPlan([]))
+    co = plane.coordinator
+    for _ in range(warmup_ticks):      # get the backlog in flight first, so
+        harness.tick()                 # migrations race live traffic
+    for shard in migrations:
+        target = next(m for m in sorted(co.masters)
+                      if m != co.owner_of(shard))
+        assert co.migrate(shard, target)
+    t0 = time.perf_counter()
+    # drain the backlog AND the migration protocol AND the fault plan —
+    # a flat DAG finishes faster than a 4-step migration, so dag_success
+    # alone would return with the flip still pending
+    done = harness.run(lambda: (comp.scheduler.dag_success("backlog")
+                                and not co.busy
+                                and not harness.injector.plan.points),
+                       max_ticks=n_tasks // (STATIC_FLEET * WORKER_BATCH)
+                       + 1_000)
+    wall = time.perf_counter() - t0
+
+    duplicates = sum(1 for c in counts.values() if c > 1)
+    lost = n_tasks - len(counts)
+    bounced = (co.stats["stale_epoch_rejections"]
+               + sum(b.stats.get("frozen_bounced", 0) for b in comp.brokers)
+               + comp.scheduler.stats.get("push_retries", 0))
+    return {
+        "scenario": name, "tasks": n_tasks,
+        "ok": bool(done and lost == 0 and duplicates == 0),
+        "epoch": co.epoch,
+        "migrations": co.stats["migrations"],
+        "failovers": co.stats["failovers"],
+        "frozen_ticks": co.stats["frozen_ticks"],
+        "stale_epoch_rejections": co.stats["stale_epoch_rejections"],
+        "bounced_then_retried": bounced,
+        "push_gave_up": comp.scheduler.stats.get("push_gave_up", 0),
+        "masters_alive": co.metrics()["masters_alive"],
+        "faults_fired": [f for f, _ in harness.injector.fired],
+        "lost": lost, "duplicate_executions": duplicates,
+        "wall_s": wall,
+    }
+
+
+def _migration_matrix(n_tasks: int) -> List[dict]:
+    # initial placement is registration order: ow-shard-0 -> m0,
+    # broker-s0 -> m1, broker-s1 -> m2 — so the scripted kills below
+    # name their victims statically
+    return [
+        # the headline: migrate a broker shard AND the overwatch shard off
+        # their owners while the backlog drains — writes bounce, refresh,
+        # land; nothing is lost, nothing runs twice
+        run_migration_chaos("live_migration", n_tasks,
+                            migrations=("broker-s0", "ow-shard-0")),
+        # kill the broker-s0 owner cold mid-backlog: dead-owner detection
+        # enqueues a from-WAL failover, survivors keep serving throughout
+        run_migration_chaos(
+            "kill_master_failover", n_tasks,
+            plan=FaultPlan([FaultPoint(action="kill_master", cluster="m1",
+                                       at_op=max(n_tasks // 4, 50))])),
+        # kill the SOURCE at the flip boundary of its own live migration:
+        # the payload was exported+snapshotted at transfer, so the flip
+        # completes live and the dead domain ends the run empty-handed
+        run_migration_chaos(
+            "kill_source_at_flip", n_tasks,
+            migrations=("broker-s0",),
+            plan=FaultPlan([FaultPoint(site="migrate:broker-s0:flip",
+                                       action="kill_master",
+                                       cluster="m1")])),
+    ]
+
+
+def _summarize_migration(scenarios: List[dict]) -> dict:
+    migrations = sum(s["migrations"] for s in scenarios)
+    frozen = sum(s["frozen_ticks"] for s in scenarios)
+    return {
+        "scenarios": {s["scenario"]: s for s in scenarios},
+        "flatness": {
+            # the same hard zeros as the crash matrix — a migration or
+            # failover may never lose or double-run a task
+            "lost_tasks": float(sum(s["lost"] for s in scenarios)),
+            "duplicate_executions":
+                float(sum(s["duplicate_executions"] for s in scenarios)),
+            # bounded unavailability: frozen plane-ticks per completed
+            # migration (deterministic tick counts, host-independent)
+            "unavailability_ticks_per_migration":
+                frozen / max(migrations, 1),
+        },
+    }
+
+
 def _summarize(scenarios: List[dict]) -> dict:
     replayed = sum(r["replayed"] for s in scenarios for r in s["recoveries"])
     committed = sum(s["wal_committed"] for s in scenarios)
@@ -186,6 +312,7 @@ def run_sweep() -> dict:
                   "scripted master crashes, recovery cost trajectory"),
         **_summarize(_matrix(N_TASKS)),
         "recovery": run_json_recovery(),
+        "migration": run_json_migration(),
     }
     _CACHE["sweep"] = result
     return result
@@ -202,6 +329,17 @@ def run_json_recovery() -> dict:
     return result
 
 
+def run_json_migration() -> dict:
+    """CI-sized multi-master matrix (``durability:migration``): live shard
+    migration and master failover under load, gating hard-zero lost/dup
+    tasks plus the frozen-ticks-per-migration unavailability bound."""
+    if "migration" in _CACHE:
+        return _CACHE["migration"]
+    result = _summarize_migration(_migration_matrix(4_000))
+    _CACHE["migration"] = result
+    return result
+
+
 def run() -> List[tuple]:
     sweep = run_sweep()
     rows = []
@@ -215,6 +353,14 @@ def run() -> List[tuple]:
         rows.append((f"wall_s{tag}", s["wall_s"]))
     for k, v in sweep["flatness"].items():
         rows.append((k, v))
+    for name, s in sweep["migration"]["scenarios"].items():
+        tag = f"[{name},{s['tasks']}tasks]"
+        rows.append((f"migrations{tag}", float(s["migrations"])))
+        rows.append((f"frozen_ticks{tag}", float(s["frozen_ticks"])))
+        rows.append((f"bounced_then_retried{tag}",
+                     float(s["bounced_then_retried"])))
+    for k, v in sweep["migration"]["flatness"].items():
+        rows.append((f"migration.{k}", v))
     return rows
 
 
@@ -241,6 +387,18 @@ def _chaos_cli() -> int:
     print(f"lost_tasks={f['lost_tasks']:.0f} "
           f"duplicate_executions={f['duplicate_executions']:.0f} "
           f"replay_amplification={f['replay_amplification']:.3f}")
+    print(f"\n{'migration scenario':<22} {'ok':<4} {'epoch':<6} "
+          f"{'migr':<5} {'failov':<7} {'frozen':<7} {'bounced':<8} "
+          f"{'lost':<6} {'dups'}")
+    for name, s in sweep["migration"]["scenarios"].items():
+        print(f"{name:<22} {str(s['ok']):<4} {s['epoch']:<6} "
+              f"{s['migrations']:<5} {s['failovers']:<7} "
+              f"{s['frozen_ticks']:<7} {s['bounced_then_retried']:<8} "
+              f"{s['lost']:<6} {s['duplicate_executions']}")
+        bad += not s["ok"]
+    mf = sweep["migration"]["flatness"]
+    print(f"unavailability_ticks_per_migration="
+          f"{mf['unavailability_ticks_per_migration']:.2f}")
     return 1 if bad else 0
 
 

@@ -224,6 +224,18 @@ class LogStore:
         self.stats["lost_records"] += lost
         return lost
 
+    def lose_shards(self, shards) -> int:
+        """Crash model for a single master fault domain: drop only the named
+        shards' uncommitted tails (the dying master's stores), leaving the
+        survivors' buffered records intact."""
+        lost = 0
+        for shard in shards:
+            buf = self._buf.pop(shard, None)
+            if buf:
+                lost += len(buf)
+        self.stats["lost_records"] += lost
+        return lost
+
     # -------------------------------------------------------------- snapshot
     def snapshot(self, shard: str, payload: Any) -> None:
         """Persist a full-state payload at the current committed LSN and

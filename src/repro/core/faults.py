@@ -34,13 +34,22 @@ Scripting a ``FaultPlan``
       * ``site="commit:taskdb", hit=K`` — the Kth time that LogStore
                             commit/snapshot boundary is reached, *before* it
                             persists (crash-mid-sweep with the tail still
-                            volatile).
+                            volatile);
+      * ``site="migrate:<shard>:<step>"`` — the Kth time the shard-map
+                            coordinator reaches that live-migration step
+                            (``freeze``/``transfer``/``flip``/``replay``),
+                            fired BEFORE the step executes — the seam for
+                            killing a master or splitting the fabric at every
+                            protocol boundary.
 
     Actions: ``crash`` (default — raise ``CrashError``), ``partition`` /
     ``heal`` (flip ``cluster``'s connectivity, for partition-then-crash
-    scripts). ``FaultPlan.seeded(seed, crashes=k)`` derives a reproducible
-    crash-only schedule from one integer — the chaos matrix is a list of
-    seeds.
+    scripts), ``kill_master`` (crash ONE master fault domain via the
+    injector's ``kill_master_fn`` hook — ``cluster`` names the master, e.g.
+    ``"m1"``; the multi-master plane keeps serving on the survivors instead
+    of dying wholesale). ``FaultPlan.seeded(seed, crashes=k)`` derives a
+    reproducible crash-only schedule from one integer — the chaos matrix is
+    a list of seeds.
 
 Example::
 
@@ -77,8 +86,8 @@ class FaultPoint:
     op_kind: Optional[str] = None      # ...or before the Kth <op_kind> RPC
     site: Optional[str] = None         # ...or at a "commit:<shard>" boundary
     hit: int = 1                       # which occurrence (op_kind/site)
-    action: str = "crash"              # crash | partition | heal
-    cluster: Optional[str] = None      # target for partition/heal
+    action: str = "crash"              # crash | partition | heal | kill_master
+    cluster: Optional[str] = None      # target for partition/heal/kill_master
 
     def describe(self) -> str:
         trig = (f"op>={self.at_op}" if self.at_op is not None else
@@ -134,6 +143,10 @@ class FaultInjector:
         self.op_kind_hits: Counter = Counter()
         self.site_hits: Counter = Counter()
         self.fired: List[tuple] = []
+        # multi-master hook: set to ``plane.kill_master`` (or the
+        # coordinator's) so ``action="kill_master"`` points can crash one
+        # fault domain instead of the whole global plane
+        self.kill_master_fn: Optional[Callable[[str], Any]] = None
 
     # ------------------------------------------------------------------ seams
     def on_deliver(self, cluster: str, addr, payload) -> None:
@@ -167,6 +180,11 @@ class FaultInjector:
                 self.fabric.partition_cluster(p.cluster)
             elif p.action == "heal":
                 self.fabric.heal_cluster(p.cluster)
+            elif p.action == "kill_master":
+                if self.kill_master_fn is None:
+                    raise CrashError(
+                        f"injected {p.describe()} (no kill_master_fn wired)")
+                self.kill_master_fn(p.cluster)
             else:
                 raise CrashError(f"injected {p.describe()}")
 
@@ -196,6 +214,12 @@ class ChaosHarness:
         self.logstores = [s for s in stores if s is not None]
         for s in self.logstores:
             s.fault_hook = self.injector.on_site
+        co = getattr(plane, "coordinator", None)
+        if co is not None:
+            # multi-master plane: migration protocol steps become fault
+            # sites, and kill_master points crash single fault domains
+            co.fault_injector = self.injector
+            self.injector.kill_master_fn = plane.kill_master
         self.crashed = False
         self.crashes = 0
         self.events: List[dict] = []

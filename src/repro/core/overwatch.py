@@ -77,7 +77,8 @@ import zlib
 from collections import Counter
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core.transport import Address, Fabric, RingLog
+from repro.core.transport import (Address, Envelope, Fabric, RingLog,
+                                  StaleEpochError)
 
 OVERWATCH_PORT = 7000
 OVERWATCH_IP = "10.0.0.2"
@@ -507,6 +508,11 @@ class OverwatchService:
         self._pending_since: Optional[float] = None
         self._delivering = False
         self._replica: Optional[OverwatchReplica] = None
+        # multi-master fencing: when armed (set_fence), writes to a frozen /
+        # failed-over shard bounce with a stale-epoch hint and epoch-stamped
+        # requests are checked against the shard map. None (single-master)
+        # keeps every path byte-identical to the seed plane.
+        self._fence = None
         fabric.register_handler(cluster, addr, self.handle)
         # one endpoint per shard, so shard-aware clients skip the front-end hop
         for i in range(len(self.shards)):
@@ -530,6 +536,10 @@ class OverwatchService:
             if op in _KEY_OPS:
                 target = shard if shard is not None else \
                     self.shards[self.router.shard_for_key(req["key"])]
+                if self._fence is not None and op != "get":
+                    bounce = self._fence_check(req, target)
+                    if bounce is not None:
+                        return bounce
                 return target.apply(op, req)
             if op == "range":
                 if shard is None:
@@ -557,6 +567,34 @@ class OverwatchService:
             merged.update(shard.apply("range", req)["items"])
         return {"ok": True, "items": {k: merged[k] for k in sorted(merged)}}
 
+    # ---------------------------------------------------------- epoch fencing
+    def set_fence(self, coordinator) -> None:
+        """Arm multi-master fencing (a ``repro.core.shardmap``
+        ``ShardMapCoordinator``): writes consult the shard map before
+        applying. Reads always serve — a frozen or failing-over shard acts
+        as a replica of itself until the flip lands."""
+        self._fence = coordinator
+
+    def _fence_check(self, req, shard: "OverwatchShard") -> Optional[dict]:
+        """None to proceed, or the bounce response: the shard is frozen
+        (mid-migration / owner dead), or the request carries a stale map
+        epoch. The bounce piggybacks the CURRENT epoch — the client's map
+        refresh costs zero extra round-trips."""
+        fence = self._fence
+        name = self._shard_names[shard.shard_id]
+        cur = fence.map.epoch
+        if fence.frozen(name):
+            fence.note_stale(name)
+            return {"ok": False, "error": "shard frozen (migrating)",
+                    "stale_epoch": True, "frozen": True, "epoch": cur}
+        e = req.get("epoch")
+        if e is not None and e != cur:
+            fence.note_stale(name)
+            return {"ok": False,
+                    "error": f"stale epoch {e} (current {cur})",
+                    "stale_epoch": True, "frozen": False, "epoch": cur}
+        return None
+
     # -------------------------------------------------------------------- leases
     def _sweep_leases(self) -> None:
         # watch callbacks can re-enter handle() -> _sweep_leases(); pop each
@@ -574,6 +612,17 @@ class OverwatchService:
                 lease = self._leases.get(lid)
                 if lease is None or lease.expires_at != expires_at:
                     continue                 # stale entry (keepalive or gone)
+                if self._fence is not None and any(
+                        self._fence.frozen(self._shard_names[
+                            self.router.shard_for_key(k)])
+                        for k in lease.keys):
+                    # a key's shard is mid-migration: expiring now would
+                    # mutate state behind its transferred snapshot. Defer the
+                    # WHOLE lease one clock unit (a short grace) — expiry is
+                    # delayed past the flip, never lost or half-applied.
+                    lease.expires_at = now + 1.0
+                    heapq.heappush(heap, (lease.expires_at, lid))
+                    continue
                 del self._leases[lid]
                 if self._dur is not None:
                     self._dur.append(self._meta_name, ("lx", lid))
@@ -606,9 +655,14 @@ class OverwatchService:
 
     # ----------------------------------------------------- topology / replica ops
     def _op_shard_map(self, req: dict) -> dict:
-        return {"ok": True, "num_shards": len(self.shards),
+        resp = {"ok": True, "num_shards": len(self.shards),
                 "ports": [self.addr[1] + 1 + i
                           for i in range(len(self.shards))]}
+        if self._fence is not None:
+            resp["epoch"] = self._fence.map.epoch
+            resp["assignment"] = dict(self._fence.map.assignment)
+            resp["frozen"] = self._fence.frozen_names()
+        return resp
 
     def _op_range_stale(self, req: dict) -> dict:
         """Bounded-staleness range off the replica snapshot. Serves the current
@@ -777,6 +831,95 @@ class OverwatchService:
                 "leases": {str(lid): [l.ttl, l.expires_at]
                            for lid, l in self._leases.items()}}
 
+    # ------------------------------------------------------- shard migration
+    def _carry_over(self, i: int, fresh: "OverwatchShard") -> None:
+        """Swap ``shards[i]`` for a rebuilt shard object, carrying the parts
+        that belong to the FRONT-END's contract rather than the shard's
+        state: watch registrations, undelivered coalesced events, and op
+        counters (metrics continuity). The per-shard fabric endpoint closes
+        over ``self.shards[i]``, so the swap re-points it automatically."""
+        old = self.shards[i]
+        fresh._watch_buckets = old._watch_buckets
+        fresh._watch_catchall = old._watch_catchall
+        fresh._pending = old._pending
+        fresh.op_counts = old.op_counts
+        self.shards[i] = fresh
+
+    def install_shard(self, i: int, payload: dict) -> None:
+        """Live-migration import: a fresh shard built from the transferred
+        snapshot payload (``_shard_snapshot`` format). The shard was frozen
+        between export and install, so the payload IS the current state —
+        watchers see nothing, revisions are unchanged, and lease->key
+        attachments are restored from the payload."""
+        shard = OverwatchShard(self, i)
+        for k, ent in payload["kv"].items():
+            shard._kv[k] = (ent[0], ent[1])
+        shard._keys = sorted(shard._kv)
+        for k, lid in payload["lease_of"].items():
+            lease = self._leases.get(int(lid))
+            if lease is not None:
+                lease.keys.add(k)
+        self._carry_over(i, shard)
+
+    def rebuild_shard(self, i: int) -> int:
+        """Failover rebuild: the owning master died and its uncommitted WAL
+        tail is gone. Rebuild the shard from committed snapshot + records,
+        then diff the dying shard's in-memory kv — everything watchers were
+        already told — against the durable truth and emit repair events at
+        FRESH revisions: a lost put becomes a delete tombstone, a lost
+        delete (or lost overwrite) becomes a re-put of the durable value.
+        Fresh revs are load-bearing — the replica fan-out dedupes on
+        ``rev > applied_rev``, so repairs at reused revisions would be
+        silently dropped and cluster replicas would diverge forever. The
+        repairs are WAL-appended and committed immediately, so a SECOND
+        failover replays a state that already includes them. Returns the
+        number of repaired keys."""
+        old = self.shards[i]
+        name = self._shard_names[i]
+        shard = OverwatchShard(self, i)
+        kv: Dict[str, Tuple[Any, int]] = {}
+        payload, recs = self._dur.load(name)
+        if payload:
+            for k, ent in payload["kv"].items():
+                kv[k] = (ent[0], ent[1])
+            for k, lid in payload["lease_of"].items():
+                lease = self._leases.get(int(lid))
+                if lease is not None:
+                    lease.keys.add(k)
+        for rec in recs:
+            if rec[0] == "put":
+                kv[rec[1]] = (rec[2], rec[3])
+                if rec[4] is not None:
+                    lease = self._leases.get(rec[4])
+                    if lease is not None:
+                        lease.keys.add(rec[1])
+            elif rec[0] == "del":
+                kv.pop(rec[1], None)
+        shard._kv = kv
+        shard._keys = sorted(kv)
+        self._carry_over(i, shard)
+        repaired = 0
+        for key in sorted(set(old._kv) | set(kv)):
+            durable = kv.get(key)
+            seen = old._kv.get(key)
+            if durable is None:
+                if seen is None:
+                    continue
+                # watchers saw a put whose record died with the master
+                rev = self._bump("expire", key)
+                shard.emit("delete", key, None, rev)
+                repaired += 1
+            elif seen is None or seen[0] != durable[0]:
+                # watchers saw a delete/overwrite the WAL never captured:
+                # re-assert the durable value at a fresh revision
+                rev = self._bump("put", key, durable[0])
+                shard._kv[key] = (durable[0], rev)
+                self._dur.append(name, ("put", key, durable[0], rev, None))
+                shard.emit("put", key, durable[0], rev)
+                repaired += 1
+        self._dur.commit(name)
+        return repaired
+
     def recover(self) -> None:
         """Rebuild kv, key indexes, lease table, and the revision clock as
         snapshot + WAL replay. LSN filtering in the LogStore guarantees replay
@@ -900,6 +1043,15 @@ class OverwatchClient:
         # the client derives placement from the shard count alone)
         n = len(shard_addrs or shard_vias or ())
         self._router = ShardRouter(n) if n > 1 else None
+        # multi-master epoch fencing (armed by the plane when a shard-map
+        # coordinator exists): writes carry the client's map epoch; a bounce
+        # piggybacks the current epoch (the "map refresh") and the write
+        # retries once — unless the shard is FROZEN, where an in-instant
+        # retry cannot succeed (the simulation is synchronous) and the
+        # caller gets a StaleEpochError to retry next tick.
+        self.fenced = False
+        self._epoch = 0
+        self.stats: Counter = Counter()
 
     def _route(self, req: dict) -> Tuple[str, Address]:
         """(dest_cluster, dest_addr) for this request — shard endpoint for key
@@ -924,13 +1076,43 @@ class OverwatchClient:
                 "remote overwatch access requires a gateway route (via=)")
         return self.src_cluster, self.via
 
+    # bounded fence retries: stamp -> bounce -> refresh -> restamp -> retry.
+    # Two refreshes cover a flip landing between the retry's send and apply.
+    _FENCE_ATTEMPTS = 3
+
     def _call(self, req: dict) -> dict:
-        dst_cluster, dst_addr = self._route(req)
-        resp = self.fabric.send(self.src_cluster, self.src_id,
-                                dst_cluster, dst_addr, req)
-        if not resp.get("ok", False):
-            raise RuntimeError(f"overwatch: {resp.get('error')}")
-        return resp
+        if not self.fenced:
+            dst_cluster, dst_addr = self._route(req)
+            resp = self.fabric.send(self.src_cluster, self.src_id,
+                                    dst_cluster, dst_addr, req)
+            if not resp.get("ok", False):
+                raise RuntimeError(f"overwatch: {resp.get('error')}")
+            return resp
+        # epoch-stamp plain-dict writes only: prebuilt Envelopes cache their
+        # byte size and must not be mutated (they rely on the server-side
+        # frozen check alone — a bounce surfaces as StaleEpochError and the
+        # caller's next-tick retry rebuilds the request)
+        stamped = (not isinstance(req, Envelope)
+                   and req.get("op") in ("put", "delete", "cas"))
+        if stamped:
+            req["epoch"] = self._epoch
+        for _ in range(self._FENCE_ATTEMPTS):
+            dst_cluster, dst_addr = self._route(req)
+            resp = self.fabric.send(self.src_cluster, self.src_id,
+                                    dst_cluster, dst_addr, req)
+            if resp.get("ok", False):
+                return resp
+            if not resp.get("stale_epoch"):
+                raise RuntimeError(f"overwatch: {resp.get('error')}")
+            self.stats["stale_epoch_bounces"] += 1
+            self._epoch = int(resp.get("epoch", self._epoch))
+            if resp.get("frozen") or not stamped:
+                break            # frozen shards only thaw on a later tick
+            req["epoch"] = self._epoch
+            self.stats["stale_epoch_retries"] += 1
+        raise StaleEpochError(
+            f"overwatch {req.get('op')}: fenced at epoch {self._epoch} "
+            f"(shard frozen or map moved); retry next tick")
 
     def request(self, req: dict) -> dict:
         """Send a pre-built request — the hook for hot callers that reuse a

@@ -65,7 +65,8 @@ class ManagementPlane:
                  replica_prefixes=None,
                  durability=None,
                  trace_sample: float = 0.0,
-                 metrics_every: Optional[float] = None):
+                 metrics_every: Optional[float] = None,
+                 num_masters: int = 1):
         self.fabric = Fabric(message_log_limit=message_log_limit)
         self.master = master
         # flight recorder: trace_sample > 0 arms a plane-wide tracer shared
@@ -115,6 +116,61 @@ class ManagementPlane:
         self._job_ids = itertools.count(1)
         # master hosts its own agent (idx 0)
         self._master_agent = None
+        # multi-master split (repro.core.shardmap): N crashable fault domains
+        # own the overwatch/broker shards behind an epoch-fenced shard map.
+        # num_masters=1 (default) builds no coordinator and stays
+        # behavior-identical to the single-process seed plane.
+        self.num_masters = max(1, num_masters)
+        self.coordinator = None
+        if self.num_masters > 1:
+            self._build_coordinator()
+
+    # --------------------------------------------------------------- multi-master
+    def _build_coordinator(self, fault_injector=None) -> None:
+        """(Re)build the shard-map coordinator and place every overwatch
+        shard under a master fault domain: the per-shard endpoints are
+        re-registered through each owner's liveness guard, and the overwatch
+        arms its fence. Assignment honors the WAL-recovered map, so a
+        post-crash rebuild lands every shard with the owner clients last
+        flipped to. Called from ``__init__`` and ``recover_global_plane``."""
+        from repro.core.shardmap import ShardMapCoordinator
+        prior = self.coordinator
+        co = ShardMapCoordinator(
+            self.fabric, self.master, self.num_masters,
+            durability=self.durability, tracer=self.tracer,
+            fault_injector=fault_injector or (
+                prior.fault_injector if prior is not None else None))
+        ow = self.overwatch
+        for i, name in enumerate(ow._shard_names):
+            addr = (ow.addr[0], ow.addr[1] + 1 + i)
+            co.register_shard(
+                name, addr,
+                # index closures: a migration's shard swap re-points the
+                # endpoint with no re-registration
+                lambda req, _i=i: ow._dispatch(req, ow.shards[_i]),
+                ops={
+                    # the overwatch consults the coordinator's frozen()
+                    # directly, so freeze/unfreeze carry no store-side state
+                    "freeze": lambda: None,
+                    "unfreeze": lambda: None,
+                    "export": lambda _i=i: ow._shard_snapshot(_i),
+                    "import_": lambda p, _i=i: ow.install_shard(_i, p),
+                    "rebuild": lambda _i=i: ow.rebuild_shard(_i),
+                },
+                wal_shards=(name,))
+        ow.set_fence(co)
+        co.publish = lambda payload: self.overwatch.handle(
+            {"op": "put", "key": "/sys/shardmap", "value": payload})
+        self.coordinator = co
+
+    def kill_master(self, name: str):
+        """Crash one master fault domain (multi-master planes only): its
+        endpoints die, its WAL tails are lost, and the coordinator fails its
+        shards over to survivors across the next ticks."""
+        return self.coordinator.kill_master(name)
+
+    def restart_master(self, name: str) -> None:
+        self.coordinator.restart_master(name)
 
     # ------------------------------------------------------------------- clusters
     def add_cluster(self, name: str, local_plane=None,
@@ -133,6 +189,10 @@ class ManagementPlane:
         master_state = (self._master_agent.state if self._master_agent
                         else agent.state)
         agent.bootstrap(master_state)
+        if self.coordinator is not None:
+            # epoch fencing: the agent's overwatch client stamps writes with
+            # its map epoch and refreshes off stale-epoch bounces
+            agent.ow.fenced = True
         agent.register()
         if self.shipper is not None and not is_master:
             # master-cluster reads are already fabric-local; remote clusters
@@ -174,6 +234,11 @@ class ManagementPlane:
         agent.metrics.register_source("fabric", fabric_stats)
         agent.metrics.register_source("shipper", shipper_stats)
         agent.metrics.register_source("overwatch", overwatch_stats)
+        if self.coordinator is not None:
+            # shardmap.epoch / per-shard migrations / frozen_ticks /
+            # stale_epoch_rejections ride the same /metrics/<cluster>/ feed
+            agent.metrics.register_source(
+                "shardmap", lambda: self.coordinator.metrics())
 
     # ------------------------------------------------------------------ app config
     def upload_spec(self, spec: AppSpec) -> None:
@@ -242,6 +307,12 @@ class ManagementPlane:
                                           durability=self.durability)
         self.dispatcher = Dispatcher(self.fabric, self.master, self.overwatch)
         self.dispatcher.tracer = self.tracer
+        if self.coordinator is not None:
+            # the whole plane restarted: every master restarts empty-handed,
+            # the map (epoch + assignment) replays from the shardmap WAL,
+            # and the fresh overwatch's shard endpoints are re-guarded under
+            # their WAL-recorded owners before any client retry lands
+            self._build_coordinator()
         self.shipper = None
         if self._replica_fanout:
             from repro.core.replica import ReplicaShipper
@@ -298,6 +369,10 @@ class ManagementPlane:
     def tick(self, dt: float = 1.0, n: int = 1) -> None:
         for _ in range(n):
             self.fabric.tick(dt)
+            if self.coordinator is not None:
+                # before the sweep: failover repairs emitted by a rebuild
+                # flush to watchers/replicas within the same tick
+                self.coordinator.step()
             self.overwatch.sweep()
             if self.shipper is not None:
                 self.shipper.ship_all()      # one delta envelope per cluster

@@ -83,7 +83,7 @@ from repro.core.transport import DeliveryError, Envelope
 # keyspace — placements/statuses are the dispatcher's (master-local) concern,
 # and shipping them to every cluster would be the fan-out's own traffic storm.
 REPLICA_PREFIXES: Tuple[str, ...] = ("/clusters/", "/telemetry/", "/queues/",
-                                     "/autoscale/", "/metrics/")
+                                     "/autoscale/", "/metrics/", "/sys/")
 
 # Per-watcher pending-queue cap (RingLog discipline): generous enough that a
 # healthy watcher never sees it, small enough that a permanently raising

@@ -51,6 +51,14 @@ class DeliveryError(Exception):
     """Raised when the fabric cannot deliver a message (no route / denied / down)."""
 
 
+class StaleEpochError(RuntimeError):
+    """A request was fenced by the shard map: it carried an epoch older than
+    the current map (or hit a frozen, mid-migration shard) and the bounded
+    refresh+retry in the client could not land it. Subclassing RuntimeError
+    keeps every existing best-effort caller (agent heartbeats, depth
+    publication) on its normal retry-next-tick path."""
+
+
 class RingLog:
     """Bounded append-only log (list-compatible for the common read patterns).
 

@@ -130,7 +130,7 @@ class Broker:
     def __init__(self, clock_fn=None, lease: float = 30.0,
                  requeue_front: bool = False,
                  durability=None, shard_name: str = "broker",
-                 tracer=None):
+                 tracer=None, recover: bool = True):
         # flight recorder: a "queue" span opens at push/requeue and closes at
         # pull — the queue-wait segment of a task's trace. Set BEFORE the
         # durability check below: WAL replay re-pushes messages and must
@@ -165,7 +165,15 @@ class Broker:
         self._dur = durability
         self._shard = shard_name
         self.recovered_task_keys: set = set()
-        if durability is not None and durability.has_data(shard_name):
+        # multi-master live migration (repro.core.shardmap): while frozen,
+        # every state-changing op bounces with a stale-epoch hint (depth
+        # reads keep serving); on_stale reports bounces to the coordinator.
+        # ``recover=False`` builds an empty broker for ``install_payload``
+        # (a live-migration import must not replay the WAL it is replacing).
+        self.frozen = False
+        self.on_stale = None
+        if recover and durability is not None \
+                and durability.has_data(shard_name):
             self.recover()
 
     # ------------------------------------------------------------------ leases
@@ -290,6 +298,16 @@ class Broker:
     def handle(self, msg: dict) -> dict:
         op = msg.get("op")
         self.op_counts[op] += 1
+        if self.frozen and op not in ("depth", "depth_many"):
+            # mid-migration: no state change may land behind the transferred
+            # snapshot (not even a lease expiry). Callers bounce-and-retry —
+            # the scheduler stashes its pushes, workers treat it like an
+            # empty pull / unacked batch (lease redelivery + dedup probe).
+            self.stats["frozen_bounced"] += 1
+            if self.on_stale is not None:
+                self.on_stale()
+            return {"ok": False, "error": "broker shard frozen (migrating)",
+                    "stale_epoch": True, "frozen": True}
         self._expire()
         if op == "push":
             redel = bool(msg.get("redelivered"))
@@ -402,6 +420,46 @@ class Broker:
             "inflight": [[tag, rec[0], rec[1], rec[2], rec[3]]
                          for tag, rec in self.inflight.items()],
         }
+
+    def install_payload(self, payload: dict) -> None:
+        """Live-migration import: the transferred ``snapshot_payload`` becomes
+        this broker's state verbatim — ready queues with flags, the in-flight
+        lease table (expiry heap rebuilt), and the tag epoch/counter. Leases
+        and tags SURVIVE the handoff: a worker acking a pre-migration pull
+        after the flip still lands it, so a migration costs zero redeliveries
+        (failover uses ``recover()`` instead, which requeues + bumps the
+        epoch because the old leases died with the master)."""
+        self._epoch = payload["epoch"]
+        self._tag_n = payload["tag_n"]
+        self.queues = {}
+        self._flags = {}
+        for q, items in payload["queues"].items():
+            dq = self.queues.setdefault(q, deque())
+            fq = self._flags.setdefault(q, deque())
+            for msg, flag in items:
+                dq.append(msg)
+                fq.append(flag)
+        self.inflight = {}
+        self._expiry_heap = []
+        self._inflight_count = Counter()
+        for tag, q, msg, expires, flag in payload["inflight"]:
+            self.inflight[tag] = (q, msg, expires, flag)
+            heapq.heappush(self._expiry_heap, (expires, tag))
+            self._inflight_count[q] += 1
+        self._depth_dirty = set(self.queues) | set(self._inflight_count)
+        self._published = {}
+
+    def held_task_keys(self) -> set:
+        """Every (dag, task, try) this broker currently holds — ready OR
+        leased out. The reseed-after-failover set: a queued/running taskdb
+        row with no held message lost its message and must be re-pushed."""
+        held = {(m["dag"], m["task"], m["try"])
+                for dq in self.queues.values() for m in dq
+                if isinstance(m, dict) and "dag" in m and "task" in m}
+        for q, m, _expires, _flag in self.inflight.values():
+            if isinstance(m, dict) and "dag" in m and "task" in m:
+                held.add((m["dag"], m["task"], m["try"]))
+        return held
 
     def _apply_replay(self, rec) -> None:
         """One WAL record. Types: ``push``/``pushN`` (queue, msg(s), flag),

@@ -68,7 +68,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.plane import ManagementPlane
 from repro.core.service_graph import AppSpec, Pod, Service
-from repro.core.transport import DeliveryError
+from repro.core.transport import DeliveryError, StaleEpochError
 from repro.pipelines.broker import Broker, BrokerRouter, broker_service_names
 from repro.pipelines.dag import DAG
 from repro.pipelines.scheduler import Scheduler, queue_for
@@ -195,9 +195,30 @@ class HybridComposer:
                         for sname in self._broker_services]
         self.broker = self.brokers[0]   # single-shard accessor (tests, back-compat)
         self.taskdb = TaskDB(durability=self.durability)
-        for sname, shard in zip(self._broker_services, self.brokers):
-            ServiceEndpoint(fabric, self.spec, master_state, sname,
-                            shard.handle)
+        co = getattr(self.plane, "coordinator", None)
+        for i, sname in enumerate(self._broker_services):
+            # index closure, not a bound method: a live migration or master
+            # failover swaps self.brokers[i] in place and the endpoint (and
+            # the coordinator's re-guards) follow for free
+            handler = (lambda msg, _i=i: self.brokers[_i].handle(msg))
+            ep = ServiceEndpoint(fabric, self.spec, master_state, sname,
+                                 handler)
+            if co is not None:
+                co.register_shard(
+                    sname, ep.addr, handler,
+                    ops={"freeze": (lambda _i=i: setattr(
+                            self.brokers[_i], "frozen", True)),
+                         "unfreeze": (lambda _i=i: setattr(
+                            self.brokers[_i], "frozen", False)),
+                         "export": (lambda _i=i:
+                                    self.brokers[_i].snapshot_payload()),
+                         "import_": (lambda p, _i=i:
+                                     self._install_broker_shard(_i, p)),
+                         "rebuild": (lambda _i=i:
+                                     self._failover_broker_shard(_i))},
+                    wal_shards=(sname,))
+                self.brokers[i].on_stale = (
+                    lambda _s=sname, _co=co: _co.note_stale(_s))
         ServiceEndpoint(fabric, self.spec, master_state, "taskdb",
                         self.taskdb.handle)
         sched_client = ServiceClient(fabric, master_state, "scheduler-pod")
@@ -437,6 +458,8 @@ class HybridComposer:
                      b.stats.get("recovery_replayed", 0)
                      for b in self.brokers)}
         for w in list(self.workers):
+            # stale backoff windows must not skip the recovery barrier calls
+            w.client.reset_backoff()
             stats["dropped_leases"] += w.reset_after_master_restart()
             try:
                 if w._pending_commit is not None:
@@ -476,7 +499,7 @@ class HybridComposer:
         duplicate)."""
         held: set = set()
         for shard in self.brokers:
-            held |= shard.recovered_task_keys
+            held |= shard.held_task_keys()
         held_tasks = {(d, t) for d, t, _ in held}
         self.scheduler._probe()
         pushes: Dict[str, List[dict]] = {}
@@ -501,11 +524,56 @@ class HybridComposer:
                     self.scheduler.note_inflight(did, name)
                     noted += 1
         for q in sorted(pushes):
-            self.scheduler.client.call(
-                self.router.service_for_queue(q),
-                {"op": "push_many", "queue": q, "msgs": pushes[q],
-                 "redelivered": True})
+            # through the scheduler's bounded-retry push path: a target shard
+            # that is itself frozen / failing over stashes the batch for next
+            # tick instead of losing it (double-failover scenarios)
+            self.scheduler._push(q, pushes[q], redelivered=True)
         return {"reseeded": reseeded, "noted_inflight": noted}
+
+    # ------------------------------------------------------- shard migration
+    def _install_broker_shard(self, i: int, payload: dict) -> None:
+        """Live-migration import (coordinator ``import_`` op): a fresh
+        ``Broker`` under the target master installs the transferred payload
+        directly — no WAL replay, the payload IS the committed state (the
+        coordinator snapshotted it at transfer). Counters start fresh: the
+        target is a different process in the model."""
+        fabric = self.plane.fabric
+        sname = self._broker_services[i]
+        old = self.brokers[i]
+        fresh = Broker(clock_fn=lambda: fabric.clock,
+                       durability=self.durability, shard_name=sname,
+                       tracer=self.tracer, recover=False)
+        fresh.install_payload(payload)
+        fresh.on_stale = old.on_stale
+        self.brokers[i] = fresh
+        if i == 0:
+            self.broker = fresh
+
+    def _failover_broker_shard(self, i: int) -> None:
+        """Failover rebuild (coordinator ``rebuild`` op): the owning master
+        died with this shard's uncommitted WAL tail. A fresh ``Broker``
+        replays the committed snapshot + records in its constructor —
+        requeueing recovered in-flight flagged and bumping the tag epoch so
+        the dead owner's outstanding leases can never ack — then
+        ``_reseed_tasks`` closes the taskdb-vs-broker gap for messages that
+        died in the lost tail."""
+        fabric = self.plane.fabric
+        sname = self._broker_services[i]
+        old = self.brokers[i]
+        fresh = Broker(clock_fn=lambda: fabric.clock,
+                       durability=self.durability, shard_name=sname,
+                       tracer=self.tracer)
+        fresh.on_stale = old.on_stale
+        self.brokers[i] = fresh
+        if i == 0:
+            self.broker = fresh
+        # the rebuilt shard answers immediately (its frozen flag is fresh);
+        # re-dirty its depth view so the next sweep republishes every queue
+        self._depth_published_at = None
+        stats = self._reseed_tasks()
+        for k, v in stats.items():
+            self.recovery_stats[f"failover_{k}"] = (
+                self.recovery_stats.get(f"failover_{k}", 0) + v)
 
     # ------------------------------------------------------------ depth telemetry
     def publish_queue_depths(self) -> None:
@@ -533,13 +601,19 @@ class HybridComposer:
                      else (lambda q, _i=i:
                            self.router.shard_for_queue(q) == _i))
             for queue, depth in shard.changed_depths(families=owned).items():
-                if not depth["ready"] and not depth["inflight"]:
-                    if queue in self._published_queues:
-                        ow.delete(f"/queues/{queue}")
-                        self._published_queues.discard(queue)
-                    continue
-                ow.put(f"/queues/{queue}", {**depth, "clock": now})
-                self._published_queues.add(queue)
+                try:
+                    if not depth["ready"] and not depth["inflight"]:
+                        if queue in self._published_queues:
+                            ow.delete(f"/queues/{queue}")
+                            self._published_queues.discard(queue)
+                        continue
+                    ow.put(f"/queues/{queue}", {**depth, "clock": now})
+                    self._published_queues.add(queue)
+                except (DeliveryError, StaleEpochError):
+                    # the owning overwatch shard is frozen / failing over:
+                    # re-dirty so the next sweep republishes this queue
+                    shard._published.pop(queue, None)
+                    shard._depth_dirty.add(queue)
 
     def run_dag(self, dag_id: str, max_ticks: int = 500) -> bool:
         for _ in range(max_ticks):

@@ -29,8 +29,10 @@ delta-driven.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Set
+from collections import Counter
+from typing import Dict, List, Set, Tuple
 
+from repro.core.transport import DeliveryError
 from repro.pipelines.dag import DAG, Task
 from repro.pipelines.services import ServiceClient
 
@@ -53,10 +55,19 @@ def queue_for(task: Task, cost_aware: bool = False) -> str:
 
 
 class Scheduler:
+    # a broker push that bounces (shard frozen / migrating) or dies
+    # (unreachable master) is retried once per tick up to this bound, then
+    # its tasks are marked failed — surfaced, never hung
+    PUSH_MAX_ATTEMPTS = 8
+
     def __init__(self, client: ServiceClient, clock_fn=None,
                  batched: bool = True, broker_for=None,
                  cost_aware: bool = False, tracer=None):
         self.client = client
+        self.stats: Counter = Counter()
+        # (queue, redelivered) -> msgs awaiting re-push / attempt count
+        self._push_retry: Dict[Tuple[str, bool], List[dict]] = {}
+        self._push_attempts: Dict[Tuple[str, bool], int] = {}
         self.dags: Dict[str, DAG] = {}
         self.clock_fn = clock_fn or (lambda: 0.0)
         self.batched = batched
@@ -201,6 +212,8 @@ class Scheduler:
     # -------------------------------------------------------------------- one tick
     def tick(self) -> List[str]:
         scheduled: List[str] = []
+        if self._push_retry:
+            self._drain_push_retry()
         if not self.dags:
             return scheduled
         deltas = self._probe()
@@ -311,9 +324,7 @@ class Scheduler:
             if rows:
                 self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
             for queue in sorted(pushes):
-                self.client.call(self.broker_for(queue),
-                                 {"op": "push_many", "queue": queue,
-                                  "msgs": pushes[queue]})
+                self._push(queue, pushes[queue])
         else:
             for row in rows:
                 self.client.call("taskdb", {"op": "upsert", **row})
@@ -333,6 +344,57 @@ class Scheduler:
                 rec((None, ctx, "schedule", "scheduler", t0, t1, "ok", None))
             tr.bound()
             self._staged_spans = []
+
+    def _push(self, queue: str, msgs: List[dict],
+              redelivered: bool = False) -> None:
+        """Push a batch to its owning broker shard, surviving epoch fences
+        and dead masters. The sim is synchronous, so a bounce means the batch
+        was NOT applied (responses cannot be lost): stash it and re-push at
+        the next tick — the migration freeze window and the failover repair
+        both span a bounded number of ticks. Past ``PUSH_MAX_ATTEMPTS`` the
+        batch's tasks are marked failed (their retry budget decides what
+        happens next); the scheduler never hangs and never silently drops.
+
+        The taskdb row for each message is already durable (rows flush before
+        pushes), so a stashed batch that dies with a scheduler crash is
+        re-seeded by recovery — the stash is an optimization, not the source
+        of truth."""
+        try:
+            req = {"op": "push_many", "queue": queue, "msgs": msgs}
+            if redelivered:
+                req["redelivered"] = True
+            resp = self.client.call(self.broker_for(queue), req)
+        except DeliveryError:
+            resp = None
+        key = (queue, redelivered)
+        if resp is not None and resp.get("ok", True):
+            self._push_attempts.pop(key, None)
+            return
+        attempts = self._push_attempts.get(key, 0) + 1
+        self._push_attempts[key] = attempts
+        if attempts <= self.PUSH_MAX_ATTEMPTS:
+            self._push_retry.setdefault(key, []).extend(msgs)
+            self.stats["push_retries"] += 1
+            return
+        # bound exhausted: surface as task failures, never a hang
+        clock = self.clock_fn()
+        rows = [{"dag": m["dag"], "task": m["task"], "try": m["try"],
+                 "status": "failed", "clock": clock} for m in msgs]
+        try:
+            self.client.call("taskdb", {"op": "upsert_many", "rows": rows})
+            self._push_attempts.pop(key, None)
+            self.stats["push_gave_up"] += len(msgs)
+        except DeliveryError:
+            # even the failure report could not land: keep the batch, the
+            # attempt counter stays saturated so the report retries next tick
+            self._push_retry.setdefault(key, []).extend(msgs)
+
+    def _drain_push_retry(self) -> None:
+        """Re-push every stashed batch (tick start, before new staging so a
+        retried batch keeps its place ahead of this tick's frontier)."""
+        for key in sorted(self._push_retry):
+            msgs = self._push_retry.pop(key)
+            self._push(key[0], msgs, redelivered=key[1])
 
     # ------------------------------------------------------------------ observation
     def dag_status(self, dag_id: str) -> Dict[str, str]:

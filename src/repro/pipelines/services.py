@@ -19,10 +19,27 @@ re-broadcast lands — DNS and ACLs are per-spec state rebuilt by Algorithm 5,
 not per-process state — and a pod removed from the spec is denied again at
 the next call (default-deny ACL rebuild), which is what the drained-worker
 tests assert.
+
+Retry discipline (the multi-master robustness pass): the simulation is
+synchronous, so retrying *within* a call is useless — the same instant gives
+the same answer. Instead the client keeps a per-service **backoff window**
+across calls: after a ``DeliveryError`` the service is marked down until a
+deterministic (pod-seeded, sim-clock) exponential-backoff deadline, and calls
+inside the window fail fast (``stats["fast_fails"]``) without touching the
+fabric. Each real attempt past the first counts in ``stats["retries"]``; a
+streak reaching ``MAX_ATTEMPTS`` counts one ``stats["gave_up"]`` (the
+caller's cue to surface a task failure rather than spin), then the cycle
+restarts at the capped delay. A success clears the window
+(``stats["recovered"]``). ``reset_backoff()`` drops every window — recovery
+barriers call it so a post-restart resync is never skipped by a stale
+window.
 """
 from __future__ import annotations
 
-from typing import Callable
+import random
+import zlib
+from collections import Counter
+from typing import Callable, Dict, Tuple
 
 from repro.core import gateways as GW
 from repro.core.service_graph import AppSpec
@@ -41,17 +58,54 @@ class ServiceEndpoint:
 
 
 class ServiceClient:
+    MAX_ATTEMPTS = 5
+    BACKOFF_BASE = 1.0                       # sim-seconds, ~one tick
+    BACKOFF_CAP = 8.0
+
     def __init__(self, fabric: Fabric, state: GW.GatewayState, pod: str):
         self.fabric = fabric
         self.state = state
         self.pod = pod
+        self.stats: Counter = Counter()
+        # service -> (retry_at, consecutive-failure streak)
+        self._down: Dict[str, Tuple[float, int]] = {}
+        self._rng = random.Random(zlib.crc32(pod.encode()))
+
+    def reset_backoff(self) -> None:
+        self._down.clear()
 
     def call(self, service: str, msg: dict) -> dict:
         if service not in self.state.dns:
             raise DeliveryError(f"no DNS entry for {service} in "
                                 f"{self.state.cluster}")
+        down = self._down.get(service)
+        now = self.fabric.clock
+        if down is not None and now < down[0]:
+            self.stats["fast_fails"] += 1
+            raise DeliveryError(
+                f"{service} backing off until t={down[0]:.2f} "
+                f"(streak {down[1]})")
         addr = self.state.dns[service]
         if not isinstance(msg, Envelope):
             msg = Envelope(msg)              # size once, reuse across hops
-        return self.fabric.send(self.state.cluster, self.pod,
-                                self.state.cluster, addr, msg)
+        try:
+            resp = self.fabric.send(self.state.cluster, self.pod,
+                                    self.state.cluster, addr, msg)
+        except DeliveryError:
+            streak = (down[1] if down is not None else 0) + 1
+            if streak > 1:
+                self.stats["retries"] += 1
+            if streak >= self.MAX_ATTEMPTS:
+                self.stats["gave_up"] += 1
+                streak = 0                   # restart the cycle at cap delay
+                delay = self.BACKOFF_CAP
+            else:
+                delay = min(self.BACKOFF_BASE * (2 ** (streak - 1)),
+                            self.BACKOFF_CAP)
+            delay *= 0.5 + 0.5 * self._rng.random()
+            self._down[service] = (now + delay, streak)
+            raise
+        if down is not None:
+            del self._down[service]
+            self.stats["recovered"] += 1
+        return resp

@@ -419,3 +419,291 @@ def test_eval_fails_on_half_written_checkpoint(tmp_path):
     assert state["absent"]["status"] == "failed"
     assert "result" not in state["torn"] or not (
         state["torn"].get("result") or {}).get("eval_loss")
+
+
+# =====================================================================
+# Multi-master global plane: epoch-fenced shard map, live migration,
+# chaos-tested master failover. Every scenario asserts the same
+# contract — exactly-once pipeline completion and zero lost/duplicated
+# shard keys — with single fault DOMAINS dying instead of the whole
+# global plane.
+# =====================================================================
+from repro.core.shardmap import MIGRATION_STEPS
+from repro.core.transport import StaleEpochError
+
+
+def _mm_pipeline(n_tasks, num_masters=3, broker_shards=2, fanout=False,
+                 metrics_every=None):
+    dur = LogStore()
+    plane = ManagementPlane(durability=dur, replica_fanout=fanout,
+                            num_masters=num_masters,
+                            metrics_every=metrics_every)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("onprem-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    executed = Counter()
+
+    def setup(w):
+        w.register("count",
+                   lambda p: executed.update([p["i"]]) or {"i": p["i"]})
+
+    comp = HybridComposer(plane,
+                          workers={"onprem-a": ["w0", "w1"],
+                                   "cloud-a": ["w2"]},
+                          durability=dur, broker_shards=broker_shards,
+                          worker_setup=setup)
+    comp.add_dag(DAG("d", [Task(f"t{i}", kind="count", payload={"i": i})
+                           for i in range(n_tasks)]))
+    return plane, comp, executed
+
+
+def _other_master(co, shard):
+    return next(n for n in sorted(co.masters) if n != co.owner_of(shard))
+
+
+def test_single_master_plane_builds_no_coordinator():
+    # num_masters=1 (the default everywhere else in this suite) must stay
+    # byte-identical to the seed single-process plane: no coordinator, no
+    # epoch stamping on any client
+    plane, comp, executed = _mm_pipeline(20, num_masters=1)
+    assert plane.coordinator is None
+    assert not plane.master_agent.ow.fenced
+    assert comp.run_dag("d", max_ticks=120)
+    _assert_exactly_once(executed, 20)
+
+
+def test_live_migration_under_load_exactly_once():
+    # migrate a loaded broker shard AND the overwatch shard mid-run: the
+    # run completes exactly-once and each freeze window stays bounded
+    plane, comp, executed = _mm_pipeline(200)
+    co = plane.coordinator
+    for _ in range(4):
+        comp.tick()
+    assert co.migrate("broker-s0", _other_master(co, "broker-s0"))
+    assert co.migrate("ow-shard-0", _other_master(co, "ow-shard-0"))
+    assert comp.run_dag("d", max_ticks=400)
+    _assert_exactly_once(executed, 200)
+    while co.busy:                  # the run can outrace the 4-step protocol
+        comp.tick()
+    assert co.epoch == 2 and co.stats["migrations"] == 2
+    # bounded unavailability: a 4-step migration freezes its shard for a
+    # handful of ticks, not the run
+    for shard, ticks in co.frozen_ticks_by_shard.items():
+        assert ticks <= 6, (shard, ticks)
+
+
+def test_concurrent_writes_during_freeze_bounce_then_land():
+    # writes racing the freeze window bounce with a stale-epoch hint and
+    # land on retry: no key is lost, none lands twice (revisions monotonic)
+    dur = LogStore()
+    plane = ManagementPlane(durability=dur, num_masters=3)
+    plane.add_cluster("master", is_master=True,
+                      local_plane=SimLocalPlane(caps=("control",)))
+    plane.add_cluster("cloud-a", local_plane=SimLocalPlane(caps=("cpu",)))
+    co = plane.coordinator
+    ow = plane.master_agent.ow
+    assert ow.fenced
+    assert co.migrate("ow-shard-0", _other_master(co, "ow-shard-0"))
+    pending, written, bounced = [], {}, 0
+    for i in range(20):
+        if i < 12:
+            pending.append((f"/telemetry/load-{i:02d}", {"i": i}))
+        retry = []
+        for key, val in pending:
+            try:
+                ow.put(key, val)
+                written[key] = val
+            except StaleEpochError:
+                bounced += 1
+                retry.append((key, val))
+        pending = retry
+        plane.tick()
+    assert not pending, f"writes never landed: {pending}"
+    assert bounced > 0 and co.stats["stale_epoch_rejections"] > 0
+    assert co.epoch == 1 and co.stats["migrations"] == 1
+    items = plane.overwatch.handle(
+        {"op": "range", "prefix": "/telemetry/load-"})["items"]
+    assert set(items) == set(written)
+    for key, val in written.items():
+        assert plane.overwatch.handle(
+            {"op": "get", "key": key})["value"] == val
+
+
+@pytest.mark.parametrize("step", MIGRATION_STEPS)
+def test_chaos_kill_source_master_at_each_migration_step(step):
+    # the migration SOURCE dies at every protocol boundary: pre-transfer
+    # the migration degrades to a WAL failover, post-transfer the exported
+    # payload finishes the live path — either way exactly-once holds
+    plane, comp, executed = _mm_pipeline(120)
+    co = plane.coordinator
+    src = co.owner_of("broker-s0")
+    plan = FaultPlan([FaultPoint(site=f"migrate:broker-s0:{step}",
+                                 action="kill_master", cluster=src)])
+    h = ChaosHarness(plane, comp, plan)
+    for _ in range(3):
+        h.tick()
+    assert co.migrate("broker-s0", _other_master(co, "broker-s0"))
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=500)
+    _assert_exactly_once(executed, 120)
+    while co.busy:                  # the run can outrace the protocol
+        h.tick()
+    assert h.injector.fired and not co.masters[src].alive
+    owner = co.owner_of("broker-s0")
+    assert owner != src and co.masters[owner].alive
+    assert not co.frozen("broker-s0")
+
+
+def test_chaos_partition_during_flip_both_epoch_halves():
+    # the fabric splits exactly at the flip: one half of the fleet keeps
+    # the pre-flip epoch, the other learns the new one. The cut cluster's
+    # first fenced write after heal bounces once (stale epoch) and lands
+    # on the piggybacked refresh; nothing is lost on either half.
+    plane, comp, executed = _mm_pipeline(150, fanout=True)
+    co = plane.coordinator
+    plan = FaultPlan([FaultPoint(site="migrate:ow-shard-0:flip",
+                                 action="partition", cluster="cloud-a")])
+    h = ChaosHarness(plane, comp, plan)
+    for _ in range(3):
+        h.tick()
+    assert co.migrate("ow-shard-0", _other_master(co, "ow-shard-0"))
+    while co.busy:
+        h.tick()
+    assert h.injector.fired and co.epoch == 1
+    plane.fabric.heal_cluster("cloud-a")
+    cut = plane.agents["cloud-a"].ow
+    pre = cut.stats["stale_epoch_retries"]
+    cut.put("/telemetry/cloud-a-probe", {"half": "old-epoch"})
+    assert cut.stats["stale_epoch_retries"] == pre + 1
+    plane.master_agent.ow.put("/telemetry/master-probe",
+                              {"half": "new-epoch"})
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=500)
+    _assert_exactly_once(executed, 150)
+    items = plane.overwatch.handle(
+        {"op": "range", "prefix": "/telemetry/"})["items"]
+    assert "/telemetry/cloud-a-probe" in items
+    assert "/telemetry/master-probe" in items
+
+
+def test_chaos_double_failover_kills_target_too():
+    # kill a master, then kill the failover TARGET while the repair
+    # migration is still in flight: the coordinator re-detects the dead
+    # owner and fails over again to the last survivor
+    plane, comp, executed = _mm_pipeline(150)
+    co = plane.coordinator
+    h = ChaosHarness(plane, comp)
+    for _ in range(3):
+        h.tick()
+    victim = co.owner_of("broker-s0")
+    plane.kill_master(victim)
+    h.tick()                          # failover enqueued + first step
+    target1 = next(m.target for m in co._active if m.shard == "broker-s0")
+    plane.kill_master(target1)
+    assert h.run(lambda: comp.scheduler.dag_success("d"), max_ticks=600)
+    _assert_exactly_once(executed, 150)
+    while co.busy:                  # the run can outrace the repairs
+        h.tick()
+    final = co.owner_of("broker-s0")
+    assert final not in (victim, target1) and co.masters[final].alive
+    assert co.stats["failovers"] >= 2
+    assert co.metrics()["masters_alive"] == 1
+
+
+def test_shardmap_metrics_flow_through_replica_feed():
+    # satellite: shardmap.epoch / per-shard counters ride the existing
+    # /metrics/<cluster>/<section> replica fan-out
+    plane, comp, executed = _mm_pipeline(60, fanout=True, metrics_every=1.0)
+    co = plane.coordinator
+    for _ in range(4):
+        comp.tick()
+    assert co.migrate("broker-s1", _other_master(co, "broker-s1"))
+    assert comp.run_dag("d", max_ticks=300)
+    _assert_exactly_once(executed, 60)
+    for _ in range(6):                # let the final publish + ship land
+        comp.tick()
+    view = plane.agents["onprem-a"].local_view("/metrics/")
+    row = view.get("/metrics/master/shardmap")
+    assert row is not None
+    assert row["epoch"] >= 1 and row["migrations"] >= 1
+    assert row.get("broker-s1.migrations", 0) >= 1
+
+
+def test_service_client_backoff_is_bounded_and_deterministic():
+    # satellite: DeliveryError opens a seeded, sim-clock backoff window;
+    # real attempts are bounded (gave_up fires instead of a hang) and two
+    # clients with the same pod seed fail on identical schedules
+    from types import SimpleNamespace
+    from repro.core.transport import DeliveryError
+    from repro.pipelines.services import ServiceClient
+
+    def make(pod="w0"):
+        fabric = SimpleNamespace(clock=0.0)
+        attempts = []
+
+        def send(*a, **k):
+            attempts.append(fabric.clock)
+            raise DeliveryError("down")
+        fabric.send = send
+        state = SimpleNamespace(dns={"broker": ("10.0.0.1", 6379)},
+                                cluster="c")
+        return ServiceClient(fabric, state, pod), fabric, attempts
+
+    client, fabric, attempts = make()
+    gave_up_at = None
+    for tick in range(200):
+        fabric.clock = float(tick)
+        try:
+            client.call("broker", {"op": "push"})
+        except DeliveryError:
+            pass
+        if client.stats["gave_up"]:
+            gave_up_at = tick
+            break
+    assert gave_up_at is not None               # bounded, never a hang
+    assert len(attempts) == ServiceClient.MAX_ATTEMPTS
+    assert client.stats["retries"] == ServiceClient.MAX_ATTEMPTS - 1
+    assert client.stats["fast_fails"] == gave_up_at + 1 - len(attempts)
+    client2, fabric2, attempts2 = make()
+    for tick in range(gave_up_at + 1):
+        fabric2.clock = float(tick)
+        try:
+            client2.call("broker", {"op": "push"})
+        except DeliveryError:
+            pass
+    assert attempts2 == attempts                # pod-seeded determinism
+    # recovery: a successful call clears the window
+    fabric.send = lambda *a, **k: {"ok": True}
+    fabric.clock += 20.0
+    assert client.call("broker", {"op": "push"}) == {"ok": True}
+    assert client.stats["recovered"] == 1
+    assert client._down == {}
+
+
+def test_scheduler_push_giveup_surfaces_failed_tasks():
+    # satellite: a broker that stays unreachable past the push-retry bound
+    # turns its tasks into FAILED rows — surfaced, never silently dropped
+    # or hung
+    from repro.pipelines.scheduler import Scheduler
+    from repro.pipelines.taskdb import TaskDB
+    from repro.core.transport import DeliveryError
+
+    db = TaskDB()
+    clock = [0.0]
+
+    class StubClient:
+        def call(self, service, msg):
+            if service == "taskdb":
+                return db.handle(dict(msg))
+            raise DeliveryError("broker down forever")
+
+    sched = Scheduler(StubClient(), clock_fn=lambda: clock[0])
+    sched.add_dag(DAG("d", [Task("only", kind="count", retries=0)]))
+    for i in range(40):
+        clock[0] = float(i)
+        sched.tick()
+        if sched.dag_done("d"):
+            break
+    assert sched.dag_done("d") and not sched.dag_success("d")
+    assert sched.stats["push_gave_up"] >= 1
+    assert sched.stats["push_retries"] >= Scheduler.PUSH_MAX_ATTEMPTS
+    assert sched.dag_status("d")["only"] == "failed"
